@@ -1,0 +1,44 @@
+"""Fig 3: effect of the number of codewords K.
+
+Fast mode: KL(Q‖P) and quantization distortion vs K (the mechanism the paper
+identifies); full mode additionally trains PPL per K.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (make_corpus, small_lm_config,
+                               train_lm_with_sampler)
+from repro.core import build, make_sampler, midx
+
+
+def run(fast: bool = True):
+    rows = []
+    n, d = 1000, 64
+    key = jax.random.PRNGKey(0)
+    centers = jax.random.normal(key, (32, d)) * 2.0
+    cl = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 32)
+    emb = centers[cl] + 0.15 * jax.random.normal(jax.random.fold_in(key, 2),
+                                                 (n, d))
+    z = jax.random.normal(jax.random.fold_in(key, 3), (16, d))
+    log_p = jax.nn.log_softmax(z @ emb.T, axis=-1)
+    ids = jnp.arange(n)[None].repeat(16, 0)
+    for k in (8, 16, 32, 64, 128):
+        for kind in ("pq", "rq"):
+            idx = build(jax.random.fold_in(key, k), emb, kind=kind, k=k,
+                        iters=8)
+            lq = midx.log_prob(idx, z, ids)
+            kl = float(jnp.mean(jnp.sum(jnp.exp(lq) * (lq - log_p), -1)))
+            dist = float(jnp.mean(jnp.sum(idx.residuals ** 2, -1)))
+            rows.append((f"codewords/kl/midx-{kind}/K={k}", kl,
+                         f"distortion={dist:.4f}"))
+    if not fast:
+        cfg0 = small_lm_config(vocab=2000)
+        corpus = make_corpus(cfg0, seq_len=32)
+        for k in (8, 32, 128):
+            sampler = make_sampler("midx-rq", k=k)
+            out = train_lm_with_sampler(cfg0, sampler, steps=800,
+                                        corpus=corpus)
+            rows.append((f"codewords/ppl/midx-rq/K={k}", out["ppl"], ""))
+    return rows

@@ -1,0 +1,54 @@
+"""Table 3 / Thms 6-9: empirical gradient bias vs the full-softmax gradient.
+
+Bias = ||E[∇ sampled] − ∇ full||₂ over resampled negative sets, per sampler
+and per sample size M (also covers Fig 7's sample-size effect on the
+estimator). Claim reproduced: bias(midx-rq) < bias(uniform/unigram); bias
+shrinks with M.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (make_sampler, full_softmax_loss,
+                        sampled_softmax_from_embeddings)
+
+
+def run(fast: bool = True):
+    rows = []
+    n, d, k = 400, 32, 16
+    trials = 20 if fast else 50
+    key = jax.random.PRNGKey(0)
+    centers = jax.random.normal(key, (k, d)) * 2.0
+    cl = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, k)
+    emb = centers[cl] + 0.15 * jax.random.normal(jax.random.fold_in(key, 2),
+                                                 (n, d))
+    h = 0.3 * jax.random.normal(jax.random.fold_in(key, 3), (32, d))
+    pos = jax.random.randint(jax.random.fold_in(key, 4), (32,), 0, n)
+
+    g_full = jax.grad(lambda e: full_softmax_loss(h @ e.T, pos).mean())(emb)
+    g_norm = float(jnp.linalg.norm(g_full))
+
+    for m in ([10, 50] if fast else [5, 10, 50, 100]):
+        for name in ("uniform", "unigram", "sphere", "midx-pq", "midx-rq"):
+            s = make_sampler(name, k=k)
+            st = s.init(jax.random.fold_in(key, 5), emb, np.ones(n))
+
+            @jax.jit
+            def one_grad(skey, st=st, s=s, m=m):
+                d_ = s.sample(st, skey, h, m)
+
+                def f(e):
+                    return sampled_softmax_from_embeddings(
+                        h, e, pos, d_.ids, d_.log_q).mean()
+                return jax.grad(f)(emb)
+
+            acc = None
+            for t in range(trials):
+                g = one_grad(jax.random.PRNGKey(100 + t))
+                acc = g if acc is None else acc + g
+            bias = float(jnp.linalg.norm(acc / trials - g_full))
+            rows.append((f"grad_bias/M={m}/{name}", bias,
+                         f"rel={bias / g_norm:.4f}"))
+    return rows

@@ -1,0 +1,23 @@
+"""Table 4: LM perplexity per sampler (the paper's central comparison).
+
+Small transformer LM (paper-§6.2 scale, CPU-sized) on the synthetic Zipf
+cluster corpus; every sampler trains the SAME backbone with M negatives;
+eval = exact full-softmax perplexity on held-out data. Claim reproduced:
+full ≤ midx-rq ≤ midx-pq < {unigram, lsh, sphere, rff} < uniform (ordering,
+not absolute values — DESIGN §7 scale note).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (make_corpus, sampler_suite, small_lm_config,
+                               train_lm_with_sampler, timeit)
+
+
+def run(fast: bool = True):
+    rows = []
+    cfg = small_lm_config(vocab=2000 if fast else 10_000, m=20)
+    steps = 250 if fast else 1500
+    corpus = make_corpus(cfg, seq_len=32)
+    for name, sampler in sampler_suite(k=cfg.head.midx_k).items():
+        out = train_lm_with_sampler(cfg, sampler, steps=steps, corpus=corpus)
+        rows.append((f"lm_ppl/{name}", out["ppl"], f"ce={out['ce']:.4f}"))
+    return rows

@@ -1,0 +1,124 @@
+"""Table 7: sequential recommendation (SASRec + GRU4Rec) per sampler.
+
+SASRec = the framework's causal dense transformer with items as the vocab;
+GRU4Rec = a from-scratch GRU encoder (the paper's second baseline backbone).
+Synthetic latent-factor interactions; metrics NDCG@10 / Recall@10 with exact
+full scoring at eval. Claim reproduced: adaptive (midx) > static samplers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import small_lm_config, sampler_suite
+from repro.core import sampled_softmax_from_embeddings
+from repro.core.sampled_softmax import full_softmax_loss
+from repro.data import recsys_interactions
+from repro.models import class_embeddings, forward, init_params
+from repro.models.layers import dense_init, embed_init
+from repro.optim import adamw
+from repro.utils.metrics import ndcg_at_k, recall_at_k
+
+
+# ------------------------------------------------------------- GRU4Rec
+def gru_init(key, vocab: int, d: int):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": embed_init(ks[0], vocab, d),
+        "wz": dense_init(ks[1], 2 * d, d), "wr": dense_init(ks[2], 2 * d, d),
+        "wh": dense_init(ks[3], 2 * d, d),
+    }
+
+
+def gru_forward(p, tokens):
+    x = p["embed"][tokens]                          # [B,S,D]
+    b, s, d = x.shape
+
+    def cell(h, xt):
+        cat = jnp.concatenate([xt, h], -1)
+        zt = jax.nn.sigmoid(cat @ p["wz"])
+        rt = jax.nn.sigmoid(cat @ p["wr"])
+        cat_r = jnp.concatenate([xt, rt * h], -1)
+        ht = jnp.tanh(cat_r @ p["wh"])
+        h = (1 - zt) * h + zt * ht
+        return h, h
+
+    _, hs = jax.lax.scan(cell, jnp.zeros((b, d)), jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(hs, 0, 1)                   # [B,S,D]
+
+
+def _train_eval(backbone: str, sampler, seqs, num_items: int, *,
+                steps: int, d: int = 64, m: int = 50, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    train, test = seqs[:, :-1], seqs
+    if backbone == "sasrec":
+        cfg = small_lm_config(vocab=num_items, d=d, layers=2, m=m)
+        params = init_params(cfg, key)
+        fwd = lambda p, t: forward(cfg, p, t)["hidden"]
+        table_of = lambda p: class_embeddings(cfg, p)
+    else:
+        params = gru_init(key, num_items, d)
+        fwd = gru_forward
+        table_of = lambda p: p["embed"]
+
+    opt = adamw(3e-3)
+    opt_state = opt.init(params)
+    s_state = sampler.init(jax.random.fold_in(key, 1), table_of(params),
+                           np.bincount(seqs.reshape(-1), minlength=num_items)
+                           + 1.0)
+
+    def loss_fn(params, tokens, labels, skey):
+        h = fwd(params, tokens)
+        table = table_of(params)
+        if sampler.name == "full-ce":
+            logits = h.astype(jnp.float32) @ table.T.astype(jnp.float32)
+            return full_softmax_loss(logits, labels).mean()
+        draw = sampler.sample(s_state, skey, h.astype(jnp.float32), m)
+        return sampled_softmax_from_embeddings(h, table, labels, draw.ids,
+                                               draw.log_q).mean()
+
+    @jax.jit
+    def step_fn(params, opt_state, tokens, labels, skey):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels, skey)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(seed)
+    for step in range(steps):
+        idx = rng.integers(0, train.shape[0], size=32)
+        toks = jnp.asarray(train[idx][:, :-1])
+        labels = jnp.asarray(train[idx][:, 1:])
+        params, opt_state, _ = step_fn(params, opt_state, toks, labels,
+                                       jax.random.fold_in(key, step))
+        if (step + 1) % 50 == 0:
+            s_state = sampler.refresh(s_state, jax.random.fold_in(key, 1_000_000 + step),
+                                      table_of(params))
+
+    # eval: predict the held-out last item with exact scoring
+    @jax.jit
+    def score(params, tokens):
+        h = fwd(params, tokens)[:, -1]
+        return h.astype(jnp.float32) @ table_of(params).T.astype(jnp.float32)
+
+    scores = np.asarray(score(params, jnp.asarray(test[:, :-1])))
+    targets = test[:, -1]
+    return (ndcg_at_k(scores[:, :num_items], targets, 10),
+            recall_at_k(scores[:, :num_items], targets, 10))
+
+
+def run(fast: bool = True):
+    rows = []
+    num_items = 500 if fast else 2000
+    seqs = recsys_interactions(256 if fast else 1024, num_items, 21, seed=0)
+    steps = 150 if fast else 800
+    names = ("full", "uniform", "unigram", "midx-rq") if fast else \
+        tuple(sampler_suite())
+    for backbone in ("sasrec", "gru4rec"):
+        suite = sampler_suite()
+        for name in names:
+            n, r = _train_eval(backbone, suite[name], seqs, num_items,
+                               steps=steps)
+            rows.append((f"recsys/{backbone}/{name}/ndcg@10", n,
+                         f"recall@10={r:.4f}"))
+    return rows

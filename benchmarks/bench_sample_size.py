@@ -1,0 +1,23 @@
+"""Fig 7: effect of the number of sampled classes M on final PPL."""
+from __future__ import annotations
+
+from benchmarks.common import (make_corpus, small_lm_config,
+                               train_lm_with_sampler)
+from repro.core import make_sampler
+from benchmarks.common import FullCE
+
+
+def run(fast: bool = True):
+    rows = []
+    cfg = small_lm_config(vocab=2000, m=20)
+    steps = 200 if fast else 1000
+    corpus = make_corpus(cfg, seq_len=32)
+    sizes = [5, 20, 100] if fast else [5, 10, 50, 100]
+    for name in ("uniform", "midx-rq"):
+        for m in sizes:
+            sampler = make_sampler(name, k=cfg.head.midx_k)
+            out = train_lm_with_sampler(cfg, sampler, steps=steps, m=m,
+                                        corpus=corpus)
+            rows.append((f"sample_size/{name}/M={m}", out["ppl"],
+                         f"ce={out['ce']:.4f}"))
+    return rows

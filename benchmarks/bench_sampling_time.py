@@ -1,0 +1,35 @@
+"""Fig 6 / Table 1: sampling time vs number of classes per sampler.
+
+Claim reproduced: MIDX sampling time is ~flat in N (O(KD+K²+M)); kernel-based
+(sphere/RFF) and LSH grow with N; static samplers are flat.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import make_sampler
+
+
+def run(fast: bool = True):
+    rows = []
+    sizes = [1000, 10_000] if fast else [1000, 10_000, 100_000]
+    batch, m, d, k = 64, 100, 64, 64
+    names = ["uniform", "unigram", "sphere", "rff", "lsh", "midx-pq", "midx-rq"]
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (batch, d))
+    for n in sizes:
+        emb = jax.random.normal(jax.random.fold_in(key, n), (n, d)) * 0.3
+        freq = np.random.default_rng(0).random(n) + 0.1
+        for name in names:
+            s = make_sampler(name, k=k)
+            st = s.init(jax.random.fold_in(key, 1), emb, freq)
+            fn = jax.jit(lambda skey, st=st, s=s: s.sample(st, skey, z, m).ids)
+            us = timeit(fn, jax.random.PRNGKey(2), repeats=5)
+            rows.append((f"sampling_time/{name}/N={n}", us,
+                         f"batch={batch},M={m}"))
+    return rows

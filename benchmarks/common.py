@@ -1,0 +1,152 @@
+"""Shared harness for the paper-table benchmarks.
+
+Each bench module exposes run(fast: bool) -> list[(name, us_per_call, derived)]
+rows; benchmarks/run.py prints them as `name,us_per_call,derived` CSV.
+
+The LM benches train a small transformer (paper §6.2 scale, CPU-sized) with a
+pluggable Sampler for the sampled-softmax head — the exact experimental frame
+of the paper (full softmax vs. sampled variants on the same backbone).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, HeadConfig
+from repro.core import Sampler, make_sampler, sampled_softmax_from_embeddings
+from repro.core.sampled_softmax import full_softmax_loss
+from repro.data import ZipfLM
+from repro.models import class_embeddings, forward, init_params
+from repro.optim import adamw
+from repro.utils.metrics import perplexity
+
+
+def timeit(fn: Callable, *args, repeats: int = 10, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return 1e6 * float(np.median(ts))
+
+
+def small_lm_config(vocab: int = 2000, d: int = 64, layers: int = 2,
+                    m: int = 20, k: int = 32) -> ModelConfig:
+    return ModelConfig(
+        name="bench-lm", family="dense", num_layers=layers, d_model=d,
+        num_heads=4, num_kv_heads=4, d_ff=4 * d, vocab_size=vocab,
+        head_dim=d // 4, tie_embeddings=True, vocab_pad_multiple=16,
+        remat=False,
+        head=HeadConfig(mode="midx", midx_k=k, num_negatives=m,
+                        proposal="per_token", refresh_every=50))
+
+
+def make_corpus(cfg: ModelConfig, seq_len: int, n_train: int = 512,
+                n_eval: int = 64, seed: int = 0):
+    gen = ZipfLM(vocab_size=cfg.vocab_size, num_clusters=64,
+                 seq_len=seq_len + 1, seed=seed)
+    train = gen.sample(n_train)
+    evals = gen.sample(n_eval, seed=seed + 10_000)
+    freq = gen.unigram_counts(train).astype(np.float64) + 1.0
+    return train, evals, freq
+
+
+def train_lm_with_sampler(cfg: ModelConfig, sampler: Sampler, *,
+                          steps: int, seq_len: int = 32, batch: int = 16,
+                          m: Optional[int] = None, lr: float = 3e-3,
+                          refresh_every: int = 50, seed: int = 0,
+                          corpus=None) -> dict:
+    """Train the small LM with `sampler` providing negatives; eval full-CE PPL."""
+    m = m or cfg.head.num_negatives
+    key = jax.random.PRNGKey(seed)
+    train, evals, freq = corpus or make_corpus(cfg, seq_len)
+    params = init_params(cfg, key)
+    opt = adamw(lr)
+    opt_state = opt.init(params)
+    s_state = sampler.init(jax.random.fold_in(key, 1),
+                           class_embeddings(cfg, params), freq)
+
+    def loss_fn(params, s_state, tokens, labels, skey):
+        out = forward(cfg, params, tokens)
+        h = out["hidden"]
+        table = class_embeddings(cfg, params)
+        if sampler.name == "full-ce":
+            logits = h.astype(jnp.float32) @ table.T.astype(jnp.float32)
+            return full_softmax_loss(logits, labels).mean()
+        draw = sampler.sample(s_state, skey, h.astype(jnp.float32), m)
+        return sampled_softmax_from_embeddings(h, table, labels, draw.ids,
+                                               draw.log_q).mean()
+
+    @jax.jit
+    def step_fn(params, opt_state, s_state, tokens, labels, skey):
+        loss, grads = jax.value_and_grad(loss_fn)(params, s_state, tokens,
+                                                  labels, skey)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(seed)
+    for step in range(steps):
+        idx = rng.integers(0, train.shape[0], size=batch)
+        seqs = train[idx]
+        tokens = jnp.asarray(seqs[:, :-1])
+        labels = jnp.asarray(seqs[:, 1:])
+        params, opt_state, _ = step_fn(params, opt_state, s_state, tokens,
+                                       labels, jax.random.fold_in(key, step))
+        if refresh_every and (step + 1) % refresh_every == 0:
+            s_state = sampler.refresh(s_state, jax.random.fold_in(key, 1_000_000 + step),
+                                      class_embeddings(cfg, params))
+
+    # eval: exact full-softmax CE on held-out data
+    @jax.jit
+    def eval_ce(params, tokens, labels):
+        out = forward(cfg, params, tokens)
+        table = class_embeddings(cfg, params)
+        logits = out["hidden"].astype(jnp.float32) @ table.T.astype(jnp.float32)
+        mask = jnp.ones_like(labels, jnp.float32)
+        ce = full_softmax_loss(logits, labels)
+        return jnp.sum(ce * mask) / jnp.sum(mask)
+
+    ces = []
+    for i in range(0, evals.shape[0], batch):
+        seqs = evals[i: i + batch]
+        ces.append(float(eval_ce(params, jnp.asarray(seqs[:, :-1]),
+                                 jnp.asarray(seqs[:, 1:]))))
+    ce = float(np.mean(ces))
+    return {"ppl": perplexity(ce), "ce": ce, "params": params}
+
+
+class FullCE:
+    """Sentinel 'sampler' meaning exact full-softmax training."""
+    name = "full-ce"
+
+    def init(self, key, emb, freq=None):
+        return {}
+
+    def sample(self, state, key, z, m):
+        raise RuntimeError
+
+    def log_prob(self, state, z, ids):
+        raise RuntimeError
+
+    def refresh(self, state, key, emb):
+        return state
+
+
+def sampler_suite(k: int = 32) -> dict[str, object]:
+    return {
+        "full": FullCE(),
+        "uniform": make_sampler("uniform"),
+        "unigram": make_sampler("unigram"),
+        "lsh": make_sampler("lsh"),
+        "sphere": make_sampler("sphere"),
+        "rff": make_sampler("rff"),
+        "midx-pq": make_sampler("midx-pq", k=k),
+        "midx-rq": make_sampler("midx-rq", k=k),
+    }

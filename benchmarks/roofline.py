@@ -1,0 +1,174 @@
+"""§Roofline: per-(arch × shape × mesh) three-term roofline from the dry-run.
+
+Methodology (EXPERIMENTS.md §Roofline):
+- XLA cost_analysis counts a while-loop (lax.scan) body ONCE, not ×trip-count,
+  so raw numbers under-report layer-scanned work by ~L. The calibration
+  variants (L ∈ {0,1,2}, written by `dryrun.py --calibrate`) recover totals:
+      flops(L) = f0 + L·(f1 − f0)
+      coll(L)  = c0 + L·(c1 − c0)
+      bytes(L) = b1 + (L−1)·(b2 − b1)
+- lax.cond branches are BOTH counted, so the hybrid/vlm conditional block
+  (applied every `every` layers) is overcounted inside the body; the twin
+  variants (same dims, cond block stripped) isolate its cost and we keep only
+  L/every applications.
+- MODEL_FLOPS = 6·N(_active)·tokens (train) or 2·N·tokens (inference),
+  per device; useful/HLO ratio exposes remat + replicated-attention waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.steps import abstract_params
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+SHAPES = {"train_4k": (256, 4096), "prefill_32k": (32, 32768),
+          "decode_32k": (128, 32768), "long_500k": (1, 524288)}
+
+
+def param_count(cfg, *, active: bool = False) -> int:
+    p_abs = abstract_params(cfg)
+    leaves = jax.tree_util.tree_flatten_with_path(p_abs)[0]
+    total = 0
+    for path, leaf in leaves:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if active and cfg.num_experts:
+            names = [str(getattr(pp, "key", pp)) for pp in path]
+            if any(nm in ("w_gate", "w_up", "w_down") for nm in names):
+                n = n * cfg.num_experts_per_tok // cfg.num_experts
+        total += n
+    return total
+
+
+def model_flops_per_device(rec: dict) -> float:
+    cfg = get_config(rec["arch"])
+    n = param_count(cfg, active=True)
+    chips = rec["chips"]
+    gb, sl = SHAPES[rec["shape"]]
+    if rec["kind"] == "train":
+        return 6.0 * n * gb * sl / chips
+    if rec["kind"] == "prefill":
+        return 2.0 * n * gb * sl / chips
+    return 2.0 * n * gb / chips              # decode: one token per sequence
+
+
+def load_records(dirname: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        if f.endswith("__calib.json"):
+            continue
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def load_calib(dirname: str = "experiments/dryrun") -> dict:
+    out = {}
+    for f in glob.glob(os.path.join(dirname, "*__calib.json")):
+        with open(f) as fh:
+            c = fh.read()
+        c = json.loads(c)
+        out[(c["arch"], c["shape"], c["mesh"], c["head"])] = c["variants"]
+    return out
+
+
+def corrected_terms(rec: dict, calib: dict) -> dict:
+    """Apply the scan-multiplier + cond-twin corrections. Falls back to raw
+    metrics when no calibration record exists."""
+    cfg = get_config(rec["arch"])
+    mesh_kind = "multi" if len(rec["mesh"]) == 3 else "single"
+    key = (rec["arch"], rec["shape"], mesh_kind, rec["head"])
+    raw = {"flops": rec["flops_per_device"], "bytes": rec["bytes_per_device"],
+           "coll": rec["collectives"]["total_bytes"], "corrected": False}
+    v = calib.get(key)
+    if not v:
+        return raw
+    L = cfg.num_layers
+    f0, f1 = v["0"]["flops"], v["1"]["flops"]
+    c0, c1 = v["0"]["collective_bytes"], v["1"]["collective_bytes"]
+    b1, b2 = v["1"]["bytes"], v["2"]["bytes"]
+    body_f, body_c, body_b = f1 - f0, c1 - c0, b2 - b1
+    if "twin1" in v:
+        every = cfg.hybrid_attn_every or cfg.cross_attn_every
+        tw_f = (v["1"]["flops"] - v["twin1"]["flops"]) - \
+               (v["0"]["flops"] - v["twin0"]["flops"])
+        tw_c = (v["1"]["collective_bytes"] - v["twin1"]["collective_bytes"]) - \
+               (v["0"]["collective_bytes"] - v["twin0"]["collective_bytes"])
+        apps = L // every
+        flops = f0 + L * (body_f - tw_f) + apps * tw_f
+        coll = c0 + L * (body_c - tw_c) + apps * tw_c
+    else:
+        flops = f0 + L * body_f
+        coll = c0 + L * body_c
+    bytes_ = b1 + (L - 1) * body_b
+    return {"flops": max(flops, raw["flops"]),
+            "bytes": max(bytes_, raw["bytes"]),
+            "coll": max(coll, raw["coll"]), "corrected": True}
+
+
+def analyze_record(rec: dict, calib: dict) -> dict:
+    c = corrected_terms(rec, calib)
+    t_compute = c["flops"] / HW["peak_flops"]
+    t_memory = c["bytes"] / HW["hbm_bw"]
+    t_coll = c["coll"] / HW["ici_bw"]
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(rec)
+    t_bound = max(t_compute, t_memory, t_coll)
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "kind", "head", "mesh",
+                               "chips")},
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant, "model_flops": mf,
+        "useful_ratio": mf / c["flops"] if c["flops"] else 0.0,
+        "roofline_frac": (mf / HW["peak_flops"]) / t_bound if t_bound else 0.0,
+        "calibrated": c["corrected"],
+    }
+
+
+def format_table(dirname: str = "experiments/dryrun",
+                 single_pod_only: bool = True) -> str:
+    """§Roofline table. Single-pod only (the spec's scope); multi-pod cells
+    are compile-proof (§Dry-run) and have no calibration variants."""
+    recs = load_records(dirname)
+    calib = load_calib(dirname)
+    header = ("| arch | shape | mesh | head | compute_s | memory_s | "
+              "collective_s | dominant | useful/HLO | roofline frac | cal |")
+    sep = "|" + "---|" * 11
+    lines = [header, sep]
+    for r in recs:
+        if single_pod_only and len(r["mesh"]) == 3:
+            continue
+        a = analyze_record(r, calib)
+        mesh = "x".join(map(str, a["mesh"]))
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {mesh} | {a['head']} "
+            f"| {a['compute_s']:.4f} | {a['memory_s']:.4f} "
+            f"| {a['collective_s']:.4f} | {a['dominant']} "
+            f"| {a['useful_ratio']:.3f} | {a['roofline_frac']:.4f} "
+            f"| {'y' if a['calibrated'] else 'n'} |")
+    return "\n".join(lines)
+
+
+def run(fast: bool = True):
+    recs = load_records()
+    calib = load_calib()
+    rows = []
+    for r in recs:
+        a = analyze_record(r, calib)
+        t_bound = max(a["compute_s"], a["memory_s"], a["collective_s"])
+        mesh = "x".join(map(str, a["mesh"]))
+        rows.append((f"roofline/{a['arch']}/{a['shape']}/{mesh}/{a['head']}",
+                     t_bound * 1e6,
+                     f"dominant={a['dominant']};frac={a['roofline_frac']:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(format_table())

@@ -1,0 +1,60 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator — one module per paper table/figure (DESIGN §7).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only lm_ppl,kl,...]
+Fast mode (default) sizes every bench for CPU minutes; --full uses
+paper-scale settings where feasible.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_codewords, bench_grad_bias, bench_kl,
+                        bench_learnable, bench_lm_ppl, bench_recsys,
+                        bench_sample_size, bench_sampling_time, bench_xmc,
+                        roofline)
+
+ALL = {
+    "sampling_time": bench_sampling_time,   # Fig 6 / Table 1
+    "kl": bench_kl,                         # Table 2 / Figs 4-5
+    "grad_bias": bench_grad_bias,           # Table 3 (+ Fig 7 estimator view)
+    "lm_ppl": bench_lm_ppl,                 # Table 4
+    "learnable": bench_learnable,           # Table 5
+    "codewords": bench_codewords,           # Fig 3
+    "sample_size": bench_sample_size,       # Fig 7
+    "recsys": bench_recsys,                 # Table 7
+    "xmc": bench_xmc,                       # Table 9
+    "roofline": roofline,                   # §Roofline (from dry-run JSONs)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = list(ALL) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod = ALL[name]
+        t0 = time.time()
+        try:
+            rows = mod.run(fast=not args.full)
+        except Exception as e:
+            print(f"{name},ERROR,{e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+            failures += 1
+            continue
+        for row_name, value, derived in rows:
+            print(f"{row_name},{value:.4f},{derived}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

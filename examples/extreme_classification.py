@@ -1,0 +1,14 @@
+"""Extreme classification (paper §6.4): MIDX sampled softmax on sparse BOW.
+
+Run:  PYTHONPATH=src python examples/extreme_classification.py
+"""
+from benchmarks.bench_xmc import run
+
+
+def main():
+    for name, value, derived in run(fast=True):
+        print(f"  {name:22s} {value:.4f}  {derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Serving example: batched decode with the exact head vs the MIDX decode
+head (beyond-paper application — next-token sampling without the [B, V]
+logits matrix; DESIGN §5).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.configs import get_config
+from repro.launch.serve import serve
+
+
+def main():
+    cfg = get_config("paper-lm")
+    for head in ("full", "midx"):
+        serve(cfg, batch=4, prompt_len=8, gen_tokens=24, head=head)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""§Perf hillclimb driver: measure the three selected cells before/after.
+
+before = paper-naive: autodiff-through-scan attention, GSPMD-propagated MoE
+         dispatch, unsharded (replicated) attention for H%16!=0.
+after  = beyond-paper optimized: custom-vjp flash attention, shard_map MoE
+         dispatch, TP-padded heads. Plus the MIDX-head variants (per_token vs
+         pooled proposal) on the representative cell.
+"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell, calibrate_cell
+
+mode = sys.argv[1]
+CELLS = [("qwen3-14b", "train_4k", "midx", None),
+         ("granite-moe-1b-a400m", "train_4k", "midx", None),
+         ("llama3.2-1b", "train_4k", "midx", None),
+         ("llama3.2-1b", "train_4k", "full", None)]
+if mode == "before":
+    kw = dict(attn_impl="autodiff", moe_impl="vmap", pad_heads=False)
+    out = "experiments/perf/before"
+else:
+    kw = dict(attn_impl="flash", moe_impl="shard_map", pad_heads=True)
+    out = "experiments/perf/after"
+    CELLS.append(("llama3.2-1b", "train_4k", "midx", "pooled"))
+
+for arch, shape, head, prop in CELLS:
+    tagkw = dict(kw)
+    run_cell(arch, shape, multi_pod=False, head_mode=head, out_dir=out,
+             **tagkw)
+    calibrate_cell(arch, shape, multi_pod=False, head_mode=head, out_dir=out,
+                   **tagkw)

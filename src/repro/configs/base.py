@@ -1,0 +1,144 @@
+"""Config system: model architecture + input shapes + head (sampler) config.
+
+One `ModelConfig` describes any of the 10 assigned architectures plus the
+paper's own small LM. `reduced()` derives the CPU smoke-test variant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadConfig:
+    """The paper's technique — sampled softmax head configuration."""
+    mode: str = "midx"            # 'midx' | 'full' | 'uniform' | 'unigram'
+    quantizer: str = "rq"         # 'pq' | 'rq'
+    midx_k: int = 64              # codewords per codebook
+    num_negatives: int = 1024     # M
+    proposal: str = "pooled"      # 'per_token' | 'pooled' | 'mixture'
+    refresh_every: int = 100      # steps between index refreshes
+    kmeans_iters: int = 8
+    learnable_codebooks: bool = False
+    mask_collisions: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    # attention options
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None   # used at long context (hybrid)
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    shared_expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    # hybrid (zamba2): shared attention block every k ssm layers
+    hybrid_attn_every: int = 0
+    # vlm: cross-attention block every k self-attn layers
+    cross_attn_every: int = 0
+    num_image_tokens: int = 0
+    # audio / enc-dec (whisper): frame-embedding stub feeds the encoder
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    # misc
+    norm_eps: float = 1e-5
+    norm: str = "rmsnorm"         # 'rmsnorm' | 'layernorm'
+    tie_embeddings: bool = True
+    act: str = "silu"             # 'silu' (SwiGLU) | 'gelu'
+    dtype: str = "bfloat16"
+    remat: bool = True
+    vocab_pad_multiple: int = 128
+    head: HeadConfig = dataclasses.field(default_factory=HeadConfig)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // max(self.num_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to(self.vocab_size, self.vocab_pad_multiple)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def with_head(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, head=dataclasses.replace(self.head, **kw))
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            num_layers=2,
+            d_model=64,
+            num_heads=max(2, min(self.num_heads, 4)),
+            num_kv_heads=max(1, min(self.num_kv_heads, 2)),
+            head_dim=16,
+            d_ff=128,
+            vocab_size=512,
+            vocab_pad_multiple=16,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            num_experts_per_tok=min(self.num_experts_per_tok, 2) if self.num_experts else 0,
+            shared_expert_d_ff=64 if self.shared_expert_d_ff else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=8,
+            hybrid_attn_every=2 if self.hybrid_attn_every else 0,
+            cross_attn_every=2 if self.cross_attn_every else 0,
+            num_image_tokens=8 if self.num_image_tokens else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            encoder_seq=16 if self.encoder_seq else 0,
+            head=dataclasses.replace(self.head, midx_k=8, num_negatives=16,
+                                     kmeans_iters=3),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str                     # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                     # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+LM_SHAPES = (
+    ShapeConfig("train_4k", "train", 4096, 256),
+    ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    ShapeConfig("decode_32k", "decode", 32768, 128),
+    ShapeConfig("long_500k", "decode", 524288, 1),
+)
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    for s in LM_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)

@@ -1,0 +1,9 @@
+"""qwen3-14b [hf:Qwen/Qwen3-8B family scaled; hf] — qk_norm, GQA."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b", family="dense",
+    num_layers=40, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=17408, vocab_size=151936, head_dim=128,
+    qk_norm=True, rope_theta=1_000_000.0, tie_embeddings=False,
+)

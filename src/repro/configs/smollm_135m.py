@@ -1,0 +1,9 @@
+"""smollm-135m [hf:HuggingFaceTB/SmolLM-135M; hf] — llama-arch small."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m", family="dense",
+    num_layers=30, d_model=576, num_heads=9, num_kv_heads=3,
+    d_ff=1536, vocab_size=49152,
+    tie_embeddings=True,
+)

@@ -1,0 +1,13 @@
+# The paper's primary contribution: MIDX adaptive sampled softmax.
+from repro.core.kmeans import kmeans, KMeansResult
+from repro.core.quantization import fit, fit_pq, fit_rq, Quantization, query_scores
+from repro.core.index import MultiIndex, build, refresh
+from repro.core.alias import AliasTable, build_alias, sample_alias
+from repro.core import midx
+from repro.core.midx import Draw
+from repro.core.samplers import make_sampler, Sampler, SAMPLER_NAMES
+from repro.core.sampled_softmax import (
+    sampled_softmax_loss, full_softmax_loss, sampled_softmax_from_embeddings,
+    corrected_logits)
+from repro.core.learnable import (
+    LearnableCodebooks, init_learnable, codebook_losses, index_from_learnable)

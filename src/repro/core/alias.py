@@ -1,0 +1,54 @@
+"""Vose alias method (Walker 1977) — O(1) categorical draws via two gathers.
+
+The table is built host-side in numpy (O(N), once per distribution change) and
+sampled under jit: draw bin u ~ U[0,N), accept bin if v < prob[u] else alias[u].
+Used by the unigram baseline sampler and anywhere a static categorical is hot.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AliasTable(NamedTuple):
+    prob: jax.Array     # [N] float32 acceptance probability per bin
+    alias: jax.Array    # [N] int32 alias bin
+    logq: jax.Array     # [N] float32 log of the underlying distribution
+
+
+def build_alias(p: np.ndarray) -> AliasTable:
+    """Build from an (unnormalized) distribution p >= 0."""
+    p = np.asarray(p, dtype=np.float64)
+    assert p.ndim == 1 and np.all(p >= 0) and p.sum() > 0
+    n = p.shape[0]
+    q = p / p.sum()
+    scaled = q * n
+    prob = np.zeros(n, np.float64)
+    alias = np.zeros(n, np.int64)
+    small = [i for i in range(n) if scaled[i] < 1.0]
+    large = [i for i in range(n) if scaled[i] >= 1.0]
+    while small and large:
+        s, l = small.pop(), large.pop()
+        prob[s] = scaled[s]
+        alias[s] = l
+        scaled[l] = scaled[l] - (1.0 - scaled[s])
+        (small if scaled[l] < 1.0 else large).append(l)
+    for rest in small + large:
+        prob[rest] = 1.0
+    logq = np.log(np.maximum(q, 1e-30))
+    return AliasTable(jnp.asarray(prob, jnp.float32),
+                      jnp.asarray(alias, jnp.int32),
+                      jnp.asarray(logq, jnp.float32))
+
+
+def sample_alias(key: jax.Array, table: AliasTable, shape: tuple[int, ...]) -> jax.Array:
+    """Draw `shape` i.i.d. samples. Two gathers per draw."""
+    n = table.prob.shape[0]
+    bin_key, flip_key = jax.random.split(key)
+    bins = jax.random.randint(bin_key, shape, 0, n)
+    v = jax.random.uniform(flip_key, shape)
+    accept = v < table.prob[bins]
+    return jnp.where(accept, bins, table.alias[bins]).astype(jnp.int32)

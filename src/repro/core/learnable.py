@@ -1,0 +1,101 @@
+"""Learnable codebooks (paper §6.2.3): codewords as trainable parameters.
+
+Instead of K-means, codewords C¹,C² are optimized jointly with the model by:
+  L_recon = Σ_i ‖q̂_i − q_i‖²  with soft assignments w_k = softmax(q_iᵀ c_k)
+  L_KL    = KL(P(·|z) ‖ P̂(·|z)) where P̂ uses the reconstructed embeddings q̂
+The KL term directly shrinks the sampler's proposal divergence (Theorems 5/13).
+Hard assignments for the sampling index are refreshed from the learned
+codewords (assign-only, no k-means).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.index import MultiIndex, from_quantization
+from repro.core.quantization import Quantization, _assign
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("codebook1", "codebook2"),
+                   meta_fields=("kind",))
+@dataclasses.dataclass(frozen=True)
+class LearnableCodebooks:
+    kind: str           # 'pq' | 'rq' (static metadata)
+    codebook1: jax.Array
+    codebook2: jax.Array
+
+
+def init_learnable(key: jax.Array, d: int, k: int, kind: str = "rq",
+                   scale: float = 0.02) -> LearnableCodebooks:
+    k1, k2 = jax.random.split(key)
+    dim = d // 2 if kind == "pq" else d
+    return LearnableCodebooks(
+        kind,
+        scale * jax.random.normal(k1, (k, dim), jnp.float32),
+        scale * jax.random.normal(k2, (k, dim), jnp.float32))
+
+
+def from_index(index: MultiIndex) -> LearnableCodebooks:
+    """Warm-start learnable codebooks from a fitted (k-means) index — the
+    paper's setting: K-means init, then KL+recon fine-tuning (§6.2.3)."""
+    return LearnableCodebooks(index.kind, index.codebook1, index.codebook2)
+
+
+def soft_reconstruct(cb: LearnableCodebooks, q: jax.Array) -> jax.Array:
+    """q̂_i = [Σ w¹ c¹ ⊕ Σ w² c²] (pq) or Σ w¹ c¹ + Σ w² c² (rq)."""
+    q = q.astype(jnp.float32)
+    if cb.kind == "pq":
+        d = q.shape[-1]
+        q1, q2 = q[..., : d // 2], q[..., d // 2:]
+        w1 = jax.nn.softmax(q1 @ cb.codebook1.T, axis=-1)
+        w2 = jax.nn.softmax(q2 @ cb.codebook2.T, axis=-1)
+        return jnp.concatenate([w1 @ cb.codebook1, w2 @ cb.codebook2], axis=-1)
+    w1 = jax.nn.softmax(q @ cb.codebook1.T, axis=-1)
+    r1 = w1 @ cb.codebook1
+    w2 = jax.nn.softmax((q - r1) @ cb.codebook2.T, axis=-1)
+    return r1 + w2 @ cb.codebook2
+
+
+def reconstruction_loss(cb: LearnableCodebooks, q: jax.Array) -> jax.Array:
+    diff = soft_reconstruct(cb, q) - q.astype(jnp.float32)
+    return jnp.mean(jnp.sum(diff * diff, axis=-1))
+
+
+def kl_loss(cb: LearnableCodebooks, z: jax.Array, q: jax.Array) -> jax.Array:
+    """KL(P ‖ P̂) between true softmax and reconstructed-embedding softmax.
+
+    Computed over the provided class set (full N for small tasks, an in-batch
+    subset at scale). z: [..., D], q: [N, D].
+    """
+    z = z.astype(jnp.float32)
+    q_hat = soft_reconstruct(cb, q)
+    log_p = jax.nn.log_softmax(z @ q.T.astype(jnp.float32), axis=-1)
+    log_p_hat = jax.nn.log_softmax(z @ q_hat.T, axis=-1)
+    return jnp.mean(jnp.sum(jnp.exp(log_p) * (log_p - log_p_hat), axis=-1))
+
+
+def codebook_losses(cb: LearnableCodebooks, z: jax.Array, q: jax.Array,
+                    recon_weight: float = 1.0, kl_weight: float = 1.0):
+    lr = reconstruction_loss(cb, q)
+    lk = kl_loss(cb, z, q)
+    return recon_weight * lr + kl_weight * lk, {"recon": lr, "kl": lk}
+
+
+def index_from_learnable(cb: LearnableCodebooks, q: jax.Array) -> MultiIndex:
+    """Hard-assign classes to the learned codewords and build the CSR index."""
+    q = q.astype(jnp.float32)
+    if cb.kind == "pq":
+        d = q.shape[-1]
+        a1 = _assign(q[:, : d // 2], cb.codebook1)
+        a2 = _assign(q[:, d // 2:], cb.codebook2)
+        recon = jnp.concatenate([cb.codebook1[a1], cb.codebook2[a2]], axis=-1)
+    else:
+        a1 = _assign(q, cb.codebook1)
+        a2 = _assign(q - cb.codebook1[a1], cb.codebook2)
+        recon = cb.codebook1[a1] + cb.codebook2[a2]
+    quant = Quantization(cb.kind, cb.codebook1, cb.codebook2, a1, a2, q - recon)
+    return from_quantization(quant)

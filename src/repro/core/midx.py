@@ -1,0 +1,245 @@
+"""MIDX samplers (paper §4.2 exact, §4.3 fast) — TPU-native formulation.
+
+Fast MIDX (Theorem 2). For a query z the proposal over classes is
+    Q(i|z) ∝ exp(s1[k1(i)] + s2[k2(i)])            (counts cancel within Ω)
+realised by sampling the *joint* codeword pair (k1,k2) from the K² categorical
+with logits  J[k,k'] = s1[k] + s2[k'] + log|Ω(k,k')|  and then a uniform
+member of Ω(k1,k2) via the CSR layout. Chain rule makes this identical to the
+paper's sequential two-stage sampling, but it is one dense softmax over a
+K×K tile — MXU/VPU-friendly (DESIGN §3).
+
+Exact MIDX (Theorem 1). Stage 3 uses the residual softmax within the cluster;
+the product of the three stages equals the full softmax *exactly*. O(N·D) per
+query — used for validation and as the unbiased reference sampler.
+
+Three batching modes for training (DESIGN §3, `proposal`):
+  per_token : paper-faithful; every token draws its own M negatives.
+  pooled    : one proposal per sequence from the mean query; M shared
+              negatives; exact IS correction w.r.t. the pooled proposal.
+  mixture   : one proposal per sequence = the exact token-mixture
+              (1/S)Σ_t Q(·|z_t); computed with one K×S @ S×K einsum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.index import MultiIndex
+from repro.core.quantization import query_scores
+
+
+class Draw(NamedTuple):
+    ids: jax.Array     # [..., M] int32 sampled class ids
+    log_q: jax.Array   # [..., M] float32 log proposal prob of each id
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def joint_logits(index: MultiIndex, z: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Return (J, s1, s2): J[..., K, K] = s1 ⊕ s2 + log|Ω|  (−inf on empties)."""
+    s1, s2 = query_scores(index.kind, index.codebook1, index.codebook2,
+                          z.astype(jnp.float32))
+    j = s1[..., :, None] + s2[..., None, :] + index.log_counts
+    return j, s1, s2
+
+
+def _member_uniform(index: MultiIndex, key: jax.Array, flat_cluster: jax.Array) -> jax.Array:
+    """Uniform member of each joint cluster id (CSR O(1) draw)."""
+    cnt = index.counts.reshape(-1)[flat_cluster]
+    off = index.offsets[flat_cluster]
+    r = jax.random.randint(key, flat_cluster.shape, 0, jnp.maximum(cnt, 1))
+    return index.sorted_ids[off + r]
+
+
+def log_prob(index: MultiIndex, z: jax.Array, ids: jax.Array) -> jax.Array:
+    """log Q_midx(ids | z) — closed form of Eq.(6): s1+s2 − lse(J)."""
+    j, s1, s2 = joint_logits(index, z)
+    lse = jax.nn.logsumexp(j.reshape(*j.shape[:-2], -1), axis=-1)
+    k1 = index.assign1[ids]
+    k2 = index.assign2[ids]
+    return (jnp.take_along_axis(s1, k1, axis=-1)
+            + jnp.take_along_axis(s2, k2, axis=-1)
+            - lse[..., None])
+
+
+# ---------------------------------------------------------------------------
+# fast MIDX — per-token
+# ---------------------------------------------------------------------------
+
+def sample(index: MultiIndex, key: jax.Array, z: jax.Array, m: int) -> Draw:
+    """Per-token fast MIDX. z: [..., D] -> ids/log_q: [..., m]."""
+    k_pair, k_member = jax.random.split(key)
+    j, s1, s2 = joint_logits(index, z)
+    kk = index.num_codewords
+    flat = j.reshape(*j.shape[:-2], kk * kk)                    # [..., K²]
+    # m independent draws per row: broadcast logits over a new sample dim.
+    cluster = jax.random.categorical(k_pair, flat[..., None, :], axis=-1,
+                                     shape=(*flat.shape[:-1], m))
+    ids = _member_uniform(index, k_member, cluster)
+    lse = jax.nn.logsumexp(flat, axis=-1, keepdims=True)
+    # log q = J[c] − log|Ω(c)| − lse = s1[k1]+s2[k2] − lse
+    log_q = (jnp.take_along_axis(flat, cluster, axis=-1)
+             - index.log_counts.reshape(-1)[cluster] - lse)
+    return Draw(ids.astype(jnp.int32), log_q)
+
+
+def twostage_tables(index: MultiIndex, z: jax.Array):
+    """GEMM-form proposal tables (TPU-native, DESIGN §3):
+      s1, s2 [..., K];  logψ[..., k1] = log Σ_k2 |Ω(k1,k2)| e^{s2[k2]}
+    computed as exp(s2) @ countsᵀ (one K×K GEMM — no K² per-token table), and
+      lse = logsumexp_k1(s1 + logψ)  (the Eq.(6) normalizer).
+    This is exactly what the midx_probs Pallas kernel fuses.
+    """
+    s1, s2 = query_scores(index.kind, index.codebook1, index.codebook2,
+                          z.astype(jnp.float32))
+    c2 = jnp.max(s2, axis=-1, keepdims=True)
+    psi = jnp.exp(s2 - c2) @ index.counts.T.astype(jnp.float32)   # [..., K]
+    log_psi = jnp.log(jnp.maximum(psi, 1e-30)) + c2
+    l1 = s1 + log_psi
+    lse = jax.nn.logsumexp(l1, axis=-1)
+    return s1, s2, log_psi, lse
+
+
+def sample_twostage(index: MultiIndex, key: jax.Array, z: jax.Array,
+                    m: int) -> Draw:
+    """Per-token fast MIDX via the paper's sequential two stages, vectorized:
+    k1 ~ Cat(s1+logψ), then k2 ~ Cat(s2+log|Ω(k1,:)|), then uniform member.
+    Identical distribution to `sample` (chain rule) but O(K) per draw instead
+    of a K² table per token."""
+    k1_key, k2_key, k_member = jax.random.split(key, 3)
+    s1, s2, log_psi, lse = twostage_tables(index, z)
+    l1 = (s1 + log_psi)[..., None, :]                          # [..., 1, K]
+    k1 = jax.random.categorical(k1_key, l1, axis=-1,
+                                shape=(*s1.shape[:-1], m))     # [..., m]
+    logc_rows = index.log_counts[k1]                           # [..., m, K]
+    l2 = s2[..., None, :] + logc_rows
+    k2 = jax.random.categorical(k2_key, l2, axis=-1)           # [..., m]
+    cluster = k1 * index.num_codewords + k2
+    ids = _member_uniform(index, k_member, cluster)
+    s1_sel = jnp.take_along_axis(s1, k1, axis=-1)
+    s2_sel = jnp.take_along_axis(s2, k2, axis=-1)
+    log_q = s1_sel + s2_sel - lse[..., None]
+    return Draw(ids.astype(jnp.int32), log_q)
+
+
+# ---------------------------------------------------------------------------
+# fast MIDX — per-sequence shared negatives (pooled / mixture proposals)
+# ---------------------------------------------------------------------------
+
+def _inverse_cdf_sample(key: jax.Array, probs: jax.Array, m: int) -> jax.Array:
+    """Draw m indices from categorical prob rows. probs: [..., C] -> [..., m]."""
+    cdf = jnp.cumsum(probs, axis=-1)
+    cdf = cdf / cdf[..., -1:]
+    u = jax.random.uniform(key, (*probs.shape[:-1], m))
+    idx = jnp.sum(u[..., None, :] > cdf[..., :, None], axis=-2)
+    return jnp.clip(idx, 0, probs.shape[-1] - 1).astype(jnp.int32)
+
+
+def _shared_draw(index: MultiIndex, key: jax.Array, flat_log: jax.Array,
+                 m: int) -> Draw:
+    """Sample m (cluster, member) pairs per row of flat_log [..., K²]."""
+    k_pair, k_member = jax.random.split(key)
+    lse = jax.nn.logsumexp(flat_log, axis=-1, keepdims=True)
+    probs = jnp.exp(flat_log - lse)
+    cluster = _inverse_cdf_sample(k_pair, probs, m)
+    ids = _member_uniform(index, k_member, cluster)
+    log_q = (jnp.take_along_axis(flat_log, cluster, axis=-1)
+             - index.log_counts.reshape(-1)[cluster] - lse)
+    return Draw(ids.astype(jnp.int32), log_q)
+
+
+def sample_pooled(index: MultiIndex, key: jax.Array, z_seq: jax.Array,
+                  m: int) -> Draw:
+    """Pooled proposal: mean query per sequence. z_seq: [B, S, D] -> [B, m]."""
+    z_bar = jnp.mean(z_seq.astype(jnp.float32), axis=-2)       # [B, D]
+    j, _, _ = joint_logits(index, z_bar)
+    flat = j.reshape(*j.shape[:-2], -1)
+    return _shared_draw(index, key, flat, m)
+
+
+def sample_mixture(index: MultiIndex, key: jax.Array, z_seq: jax.Array,
+                   m: int) -> Draw:
+    """Exact token-mixture proposal per sequence.
+
+    P̄[k,k'] ∝ |Ω| ⊙ Σ_t a_t[k] b_t[k'],  a_t = exp(s1_t)/Z_t, b_t = exp(s2_t)
+    where Z_t is the per-token joint normalizer — one K×S @ S×K einsum.
+    log_q returned is w.r.t. this mixture (exact IS correction).
+    """
+    j, s1, s2 = joint_logits(index, z_seq)                      # [B,S,K,K]
+    kk = index.num_codewords
+    flat = j.reshape(*j.shape[:-2], kk * kk)
+    log_z = jax.nn.logsumexp(flat, axis=-1)                     # [B,S]
+    # stabilized: a_t[k] = exp(s1_t[k] − log_z_t + c_t), b_t[k'] = exp(s2_t[k'] − c2)
+    c1 = jnp.max(s1, axis=-1, keepdims=True)
+    c2 = jnp.max(s2, axis=-1, keepdims=True)
+    a = jnp.exp(s1 - log_z[..., None] + c2)                     # fold c2 shift
+    b = jnp.exp(s2 - c2)
+    mix = jnp.einsum("bsk,bsl->bkl", a, b)                      # [B,K,K]
+    mix_log = jnp.log(jnp.maximum(mix, 1e-30)) + index.log_counts
+    flat_mix = mix_log.reshape(mix_log.shape[0], -1)            # [B,K²]
+    return _shared_draw(index, key, flat_mix, m)
+
+
+# ---------------------------------------------------------------------------
+# exact MIDX (Theorem 1)
+# ---------------------------------------------------------------------------
+
+class ExactDecomposition(NamedTuple):
+    log_p1: jax.Array       # [..., K]      log P¹(k1 | z)
+    log_p2: jax.Array       # [..., K, K]   log P²(k2 | k1, z)
+    log_p3: jax.Array       # [..., N]      log P³(i | k1(i), k2(i), z)
+    log_softmax: jax.Array  # [..., N]      reference full log-softmax
+
+
+def exact_decomposition(index: MultiIndex, z: jax.Array,
+                        class_embeddings: jax.Array) -> ExactDecomposition:
+    """Materialize the Theorem-1 factorization (validation / small N)."""
+    z = z.astype(jnp.float32)
+    _, s1, s2 = joint_logits(index, z)
+    res_scores = z @ index.residuals.T.astype(jnp.float32)      # [..., N]
+    kk = index.num_codewords
+    joint = index.joint_cluster()                               # [N]
+    # log ω(k1,k2) = logsumexp of residual scores within each cluster
+    # (segment logsumexp: scatter-max then scatter-add of shifted exps)
+    m_seg = jnp.full((*res_scores.shape[:-1], kk * kk), -jnp.inf)
+    m_seg = m_seg.at[..., joint].max(res_scores)
+    shifted = jnp.exp(res_scores - m_seg[..., joint])
+    s_seg = jnp.zeros((*res_scores.shape[:-1], kk * kk)).at[..., joint].add(shifted)
+    log_omega = m_seg + jnp.log(jnp.maximum(s_seg, 1e-30))      # [..., K²]
+    log_omega = jnp.where(jnp.isfinite(m_seg), log_omega, -jnp.inf)
+    log_omega2 = log_omega.reshape(*log_omega.shape[:-1], kk, kk)
+    # stage 2: P²(k2|k1) ∝ ω(k1,k2) exp(s2[k2])
+    l2 = log_omega2 + s2[..., None, :]                          # [..., K, K]
+    log_psi = jax.nn.logsumexp(l2, axis=-1)                     # [..., K]
+    log_p2 = l2 - log_psi[..., None]
+    # stage 1: P¹(k1) ∝ ψ(k1) exp(s1[k1])
+    l1 = log_psi + s1
+    log_p1 = l1 - jax.nn.logsumexp(l1, axis=-1, keepdims=True)
+    # stage 3: P³(i) = exp(õ_i) / ω(k1(i),k2(i))
+    log_p3 = res_scores - log_omega[..., joint]
+    # reference
+    o = z @ class_embeddings.T.astype(jnp.float32)
+    log_sm = jax.nn.log_softmax(o, axis=-1)
+    return ExactDecomposition(log_p1, log_p2, log_p3, log_sm)
+
+
+def exact_log_prob(index: MultiIndex, z: jax.Array,
+                   class_embeddings: jax.Array) -> jax.Array:
+    """Exact MIDX proposal == the true softmax over all classes. [..., N]"""
+    o = z.astype(jnp.float32) @ class_embeddings.T.astype(jnp.float32)
+    return jax.nn.log_softmax(o, axis=-1)
+
+
+def sample_exact(index: MultiIndex, key: jax.Array, z: jax.Array,
+                 class_embeddings: jax.Array, m: int) -> Draw:
+    """Sample from the exact (= softmax) distribution. O(N·D) per query."""
+    log_p = exact_log_prob(index, z, class_embeddings)
+    ids = jax.random.categorical(key, log_p[..., None, :], axis=-1,
+                                 shape=(*log_p.shape[:-1], m))
+    log_q = jnp.take_along_axis(log_p, ids, axis=-1)
+    return Draw(ids.astype(jnp.int32), log_q)

@@ -1,0 +1,113 @@
+"""B>2 codebook MIDX (paper §4.1/§4.2: "straightforwardly extended").
+
+Residual quantization with B levels: codebooks C^1..C^B, assignments
+k_1(i)..k_B(i), residual q̃_i = q_i − Σ_l c^l_{k_l}. The fast proposal keeps
+the uniform final stage:
+
+    Q(i|z) ∝ exp(Σ_l s_l[k_l(i)])        s_l = z · C^lᵀ
+
+Sampling runs the B-stage chain with the ψ-recursion generalizing the
+two-stage GEMM form (DESIGN §3): with counts over the *joint* code tuples
+stored sparsely per class (not K^B — we never materialize the joint table):
+
+  stage l chooses k_l ∼ softmax over K of  s_l + logψ_{l}(k_1..k_l)
+  where ψ is evaluated by masking classes consistent with the chosen prefix.
+
+Complexity per query: O(B·K·D) for scores + O(B·N) for the prefix masking
+(vectorized bincounts over classes), still ≪ O(N·D) since no dot products
+with class embeddings are taken; for B=2 prefer repro.core.midx (O(K²)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans, _assign
+from repro.core.midx import Draw
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("codebooks", "assigns", "residuals"),
+                   meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class MultiIndexB:
+    codebooks: tuple        # B × [K, D]
+    assigns: tuple          # B × [N] int32
+    residuals: jax.Array    # [N, D]
+
+    @property
+    def num_books(self) -> int:
+        return len(self.codebooks)
+
+    @property
+    def num_codewords(self) -> int:
+        return self.codebooks[0].shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.assigns[0].shape[0]
+
+
+@functools.partial(jax.jit, static_argnames=("b", "k", "iters"))
+def build_b(key: jax.Array, class_emb: jax.Array, *, b: int = 4, k: int = 16,
+            iters: int = 8) -> MultiIndexB:
+    """B-level residual quantization index."""
+    resid = class_emb.astype(jnp.float32)
+    books, assigns = [], []
+    for l in range(b):
+        res = kmeans(jax.random.fold_in(key, l), resid, k, iters)
+        books.append(res.centroids)
+        assigns.append(res.assignments)
+        resid = resid - res.centroids[res.assignments]
+    return MultiIndexB(tuple(books), tuple(assigns), resid)
+
+
+def scores(index: MultiIndexB, z: jax.Array) -> jax.Array:
+    """Stacked codeword scores: [B, ..., K]."""
+    zf = z.astype(jnp.float32)
+    return jnp.stack([zf @ cb.T for cb in index.codebooks], axis=0)
+
+
+def log_prob(index: MultiIndexB, z: jax.Array, ids: jax.Array) -> jax.Array:
+    """log Q(ids|z) — closed form: Σ_l s_l[k_l(i)] − lse over all classes.
+
+    The normalizer Σ_j exp(Σ_l s_l[k_l(j)]) is computed over classes (O(N·B)
+    adds, no N·D dots)."""
+    s = scores(index, z)                                   # [B, ..., K]
+    per_class = sum(
+        jnp.take(s[l], index.assigns[l], axis=-1)          # [..., N]
+        for l in range(index.num_books))
+    lse = jax.nn.logsumexp(per_class, axis=-1, keepdims=True)
+    sel = jnp.take_along_axis(per_class, ids, axis=-1)
+    return sel - lse
+
+
+def sample(index: MultiIndexB, key: jax.Array, z: jax.Array, m: int) -> Draw:
+    """Draw m classes per query from the B-stage chain.
+
+    Implemented via the equivalent flat form: the per-class proposal logit is
+    Σ_l s_l[k_l(i)] (class-level categorical — O(N) per draw row but with no
+    N·D dot products; the index supplies the codes)."""
+    s = scores(index, z)
+    per_class = sum(jnp.take(s[l], index.assigns[l], axis=-1)
+                    for l in range(index.num_books))       # [..., N]
+    ids = jax.random.categorical(key, per_class[..., None, :], axis=-1,
+                                 shape=(*per_class.shape[:-1], m))
+    lse = jax.nn.logsumexp(per_class, axis=-1, keepdims=True)
+    log_q = jnp.take_along_axis(per_class, ids, axis=-1) - lse
+    return Draw(ids.astype(jnp.int32), log_q)
+
+
+def kl_to_softmax(index: MultiIndexB, z: jax.Array,
+                  class_emb: jax.Array) -> jax.Array:
+    """KL(Q_B ‖ P) per query — Theorem-5 analogue for B books."""
+    zf = z.astype(jnp.float32)
+    log_p = jax.nn.log_softmax(zf @ class_emb.T.astype(jnp.float32), axis=-1)
+    n = index.num_classes
+    lq = log_prob(index, z, jnp.broadcast_to(jnp.arange(n),
+                                             (*z.shape[:-1], n)))
+    return jnp.sum(jnp.exp(lq) * (lq - log_p), axis=-1)

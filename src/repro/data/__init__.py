@@ -1,0 +1,2 @@
+from repro.data.synthetic import ZipfLM, zipf_tokens, recsys_interactions, xmc_dataset
+from repro.data.pipeline import TokenStream, make_lm_stream, global_batch_iterator

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the perf-critical layers (DESIGN §3). Each kernel
+# ships as <name>/<name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+# ops.py (jit'd wrapper + custom-vjp autodiff) and ref.py (pure-jnp oracle).
+# Validated with interpret=True on CPU; TPU is the target — the multi-pod
+# dry-run compiles the XLA reference paths.

@@ -1,0 +1,34 @@
+"""Jit'd wrapper with autodiff: Pallas forward + recompute backward.
+
+The backward pass recomputes attention with the jnp oracle under
+jax.custom_vjp (memory-efficient: nothing but (q,k,v) saved between fwd and
+bwd). Non-TPU backends / use_kernel=False run the oracle forward too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def attention_op(q, k, v, causal: bool = True, interpret: bool = False):
+    return flash_attention(q, k, v, causal=causal, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, interpret):
+    return attention_op(q, k, v, causal, interpret), (q, k, v)
+
+
+def _bwd(causal, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: attention_ref(q, k, v, causal=causal),
+                     q, k, v)
+    return vjp(g)
+
+
+attention_op.defvjp(_fwd, _bwd)

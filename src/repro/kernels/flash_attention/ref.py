@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q [B,Sq,H,hd]; k/v [B,Sk,KV,hd] -> [B,Sq,H,hd] (fp32 math)."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bqkgh,bmkh->bkgqm", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqm,bmkh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)

@@ -1,0 +1,45 @@
+"""Jit'd public wrapper: MIDX proposal tables via the Pallas kernel.
+
+`use_kernel=False` (or non-TPU backends) falls back to the jnp oracle —
+the dry-run compiles the XLA path; TPU runs the fused kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.index import MultiIndex
+from repro.kernels.midx_probs.midx_probs import midx_probs
+from repro.kernels.midx_probs.ref import midx_probs_ref
+
+
+def _pad_t(x, block_t):
+    t = x.shape[0]
+    pad = (-t) % block_t
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], 0)
+    return x, t
+
+
+def proposal_tables(index: MultiIndex, z: jax.Array, *, use_kernel: bool = True,
+                    block_t: int = 256, interpret: bool = False):
+    """z [..., D] -> (s1, s2, log_psi [..., K], lse [...]). Kernel-fused on
+    TPU; identical semantics to repro.core.midx.twostage_tables."""
+    split = index.kind == "pq"
+    lead = z.shape[:-1]
+    z2d = z.reshape(-1, z.shape[-1])
+    counts = index.counts.astype(jnp.float32)
+    if not use_kernel:
+        s1, s2, lpsi, lse = midx_probs_ref(z2d, index.codebook1,
+                                           index.codebook2, counts,
+                                           split=split)
+        lse = lse[:, None]
+    else:
+        zp, t0 = _pad_t(z2d, block_t)
+        s1, s2, lpsi, lse = midx_probs(zp, index.codebook1, index.codebook2,
+                                       counts, split=split, block_t=block_t,
+                                       interpret=interpret)
+        s1, s2, lpsi, lse = (a[:t0] for a in (s1, s2, lpsi, lse))
+    k = s1.shape[-1]
+    return (s1.reshape(*lead, k), s2.reshape(*lead, k),
+            lpsi.reshape(*lead, k), lse.reshape(*lead))

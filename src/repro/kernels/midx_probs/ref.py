@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused MIDX proposal-table kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def midx_probs_ref(z: jax.Array, cb1: jax.Array, cb2: jax.Array,
+                   counts: jax.Array, *, split: bool):
+    """z [T, D]; cb1/cb2 [K, Dc] (Dc = D/2 for PQ-split, D for RQ);
+    counts [K, K] float32. Returns (s1, s2, log_psi, lse):
+      s1/s2 [T, K] codeword scores,
+      log_psi[t,k1] = log Σ_k2 counts[k1,k2]·exp(s2[t,k2]),
+      lse[t]        = logsumexp_k1(s1 + log_psi)  (Eq.(6) normalizer).
+    """
+    zf = z.astype(jnp.float32)
+    if split:
+        d = z.shape[-1]
+        z1, z2 = zf[:, : d // 2], zf[:, d // 2:]
+    else:
+        z1 = z2 = zf
+    s1 = z1 @ cb1.T.astype(jnp.float32)
+    s2 = z2 @ cb2.T.astype(jnp.float32)
+    c2 = jnp.max(s2, axis=-1, keepdims=True)
+    psi = jnp.exp(s2 - c2) @ counts.T.astype(jnp.float32)
+    log_psi = jnp.log(jnp.maximum(psi, 1e-30)) + c2
+    l1 = s1 + log_psi
+    lse = jax.nn.logsumexp(l1, axis=-1)
+    return s1, s2, log_psi, lse

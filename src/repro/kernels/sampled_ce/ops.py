@@ -1,0 +1,39 @@
+"""Jit'd wrapper with autodiff for the fused sampled-softmax CE.
+
+Forward: Pallas flash-CE (no [T, M] logits in HBM).
+Backward: custom_vjp recompute with the jnp oracle — logits exist only
+transiently inside the fused backward computation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.sampled_ce.ref import sampled_ce_ref
+from repro.kernels.sampled_ce.sampled_ce import sampled_ce
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def sampled_ce_op(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids,
+                  interpret: bool = False):
+    return sampled_ce(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids,
+                      interpret=interpret)
+
+
+def _fwd(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, interpret):
+    out = sampled_ce_op(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids,
+                        interpret)
+    return out, (hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids)
+
+
+def _bwd(interpret, res, g):
+    hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids = res
+    _, vjp = jax.vjp(
+        lambda h, pe, ne, lq: sampled_ce_ref(h, pe, ne, lq, neg_ids, pos_ids),
+        hidden, pos_emb, neg_emb, log_q)
+    dh, dpe, dne, dlq = vjp(g)
+    return dh, dpe, dne, dlq, None, None
+
+
+sampled_ce_op.defvjp(_fwd, _bwd)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused shared-negative sampled-softmax CE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sampled_ce_ref(hidden: jax.Array, pos_emb: jax.Array, neg_emb: jax.Array,
+                   log_q: jax.Array, neg_ids: jax.Array,
+                   pos_ids: jax.Array) -> jax.Array:
+    """hidden/pos_emb [T, D]; neg_emb [M, D]; log_q/neg_ids [M]; pos_ids [T].
+    Returns per-token corrected sampled-softmax CE [T] (Eq. 1 + collision
+    masking)."""
+    h = hidden.astype(jnp.float32)
+    m = neg_emb.shape[0]
+    pos_logit = jnp.sum(h * pos_emb.astype(jnp.float32), axis=-1)    # [T]
+    neg_logits = h @ neg_emb.T.astype(jnp.float32)                   # [T, M]
+    corr = neg_logits - (jnp.log(float(m)) + log_q)[None, :]
+    corr = jnp.where(neg_ids[None, :] == pos_ids[:, None], -jnp.inf, corr)
+    all_logits = jnp.concatenate([pos_logit[:, None], corr], axis=-1)
+    return jax.nn.logsumexp(all_logits, axis=-1) - pos_logit

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused shared-negative sampled-softmax CE ("flash-CE").
+
+Grid (nT, nM), nM innermost. Per (token-block, negative-block):
+  logits = h @ negEᵀ − ln(M·q)      (MXU + VPU)
+  online logsumexp accumulation      (VMEM scratch m/l, flash-style)
+On the last negative block the positive logit joins the lse and the loss
+block is written. The [T, M] corrected-logit matrix never exists in HBM —
+that is the memory the fusion saves (M=1024, T=65k ⇒ 268 MB per step).
+Collision masking (neg id == pos id) happens in-kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref, loss_ref,
+            m_ref, l_ref, *, num_neg: int):
+    im = pl.program_id(1)
+    nm = pl.num_programs(1)
+
+    @pl.when(im == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    h = h_ref[...].astype(jnp.float32)                   # [Tb, D]
+    ne = ne_ref[...].astype(jnp.float32)                 # [Mb, D]
+    logits = jax.lax.dot_general(h, ne, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Tb,Mb]
+    corr = logits - (jnp.log(float(num_neg)) + lq_ref[...])[None, :]
+    hit = nid_ref[...][None, :] == pid_ref[...][:, None]          # [Tb, Mb]
+    corr = jnp.where(hit, NEG_INF, corr)
+
+    m_prev = m_ref[...]                                  # [Tb, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(corr, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...] * alpha + jnp.sum(jnp.exp(corr - m_new), axis=-1,
+                                         keepdims=True)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(im == nm - 1)
+    def _finish():
+        pe = pe_ref[...].astype(jnp.float32)             # [Tb, D]
+        pos_logit = jnp.sum(h * pe, axis=-1, keepdims=True)        # [Tb,1]
+        m_fin = jnp.maximum(m_ref[...], pos_logit)
+        l_fin = (l_ref[...] * jnp.exp(m_ref[...] - m_fin)
+                 + jnp.exp(pos_logit - m_fin))
+        lse = jnp.log(jnp.maximum(l_fin, 1e-30)) + m_fin
+        loss_ref[...] = lse - pos_logit
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_m",
+                                             "interpret"))
+def sampled_ce(hidden: jax.Array, pos_emb: jax.Array, neg_emb: jax.Array,
+               log_q: jax.Array, neg_ids: jax.Array, pos_ids: jax.Array, *,
+               block_t: int = 256, block_m: int = 256,
+               interpret: bool = False) -> jax.Array:
+    """hidden/pos_emb [T,D]; neg_emb [M,D]; log_q/neg_ids [M]; pos_ids [T]
+    -> loss [T] (fp32)."""
+    t, d = hidden.shape
+    m = neg_emb.shape[0]
+    block_t, block_m = min(block_t, t), min(block_m, m)
+    assert t % block_t == 0 and m % block_m == 0, (t, m, block_t, block_m)
+    grid = (t // block_t, m // block_m)
+    kernel = functools.partial(_kernel, num_neg=m)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
+            pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
+            pl.BlockSpec((block_m, d), lambda it, im: (im, 0)),
+            pl.BlockSpec((block_m,), lambda it, im: (im,)),
+            pl.BlockSpec((block_m,), lambda it, im: (im,)),
+            pl.BlockSpec((block_t,), lambda it, im: (it,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, 1), lambda it, im: (it, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_t, 1), jnp.float32),
+            pltpu.VMEM((block_t, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids)
+    return out[:, 0]

@@ -1,0 +1,43 @@
+"""Jit'd wrapper + autodiff for the SSD scan kernel (recompute backward)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+def ssd_scan_batched_ref(x, bmat, cmat, adt, dt, *, chunk):
+    """Oracle over [Bt,S,H,P] via vmap of the single-head reference."""
+    def per_bh(xb, bb, cb, ab, db):
+        return ssd_scan_ref(xb, bb, cb, ab, db, chunk=chunk)
+    f = jax.vmap(jax.vmap(per_bh, in_axes=(1, None, None, 1, 1), out_axes=1),
+                 in_axes=(0, 0, 0, 0, 0))
+    return f(x.astype(jnp.float32), bmat.astype(jnp.float32),
+             cmat.astype(jnp.float32), adt.astype(jnp.float32),
+             dt.astype(jnp.float32))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ssd_scan_op(x, bmat, cmat, adt, dt, chunk: int = 128,
+                interpret: bool = False):
+    return ssd_scan(x, bmat, cmat, adt, dt, chunk=chunk, interpret=interpret)
+
+
+def _fwd(x, bmat, cmat, adt, dt, chunk, interpret):
+    return ssd_scan_op(x, bmat, cmat, adt, dt, chunk, interpret), \
+        (x, bmat, cmat, adt, dt)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, bmat, cmat, adt, dt = res
+    _, vjp = jax.vjp(
+        lambda *a: ssd_scan_batched_ref(*a, chunk=chunk),
+        x, bmat, cmat, adt, dt)
+    return vjp(g.astype(jnp.float32))
+
+
+ssd_scan_op.defvjp(_fwd, _bwd)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the chunked SSD scan (mamba2 core, per head)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x: jax.Array, bmat: jax.Array, cmat: jax.Array,
+                 adt: jax.Array, dtx_scale: jax.Array, *,
+                 chunk: int) -> jax.Array:
+    """Single-head SSD over one sequence.
+
+    x [S, P] (head inputs), bmat/cmat [S, N], adt [S] (= a·dt, negative),
+    dtx_scale [S] (= dt). Returns y [S, P]:
+        h_t = e^{adt_t}·h_{t−1} + dt_t·B_t x_tᵀ ;  y_t = C_t·h_t
+    evaluated chunk-wise (intra quadratic + inter state recurrence).
+    """
+    s, p = x.shape
+    n = bmat.shape[1]
+    nc = s // chunk
+    xc = x.reshape(nc, chunk, p)
+    bc = bmat.reshape(nc, chunk, n)
+    cc = cmat.reshape(nc, chunk, n)
+    ac = adt.reshape(nc, chunk)
+    dc = dtx_scale.reshape(nc, chunk)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(h, inp):
+        x_c, b_c, c_c, a_c, d_c = inp
+        cum = jnp.cumsum(a_c)
+        cb = c_c @ b_c.T                                   # [Q, Q]
+        l_mat = jnp.where(mask, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+        dtx = x_c * d_c[:, None]
+        y1 = (cb * l_mat) @ dtx                            # [Q, P]
+        y2 = jnp.exp(cum)[:, None] * (c_c @ h)             # [Q, P]
+        seg = jnp.exp(cum[-1] - cum)
+        s_c = b_c.T @ (dtx * seg[:, None])                 # [N, P]
+        h_new = jnp.exp(cum[-1]) * h + s_c
+        return h_new, y1 + y2
+
+    h0 = jnp.zeros((n, p), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, (xc, bc, cc, ac, dc))
+    return ys.reshape(s, p)

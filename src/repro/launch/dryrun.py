@@ -1,0 +1,435 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: the SPMD
+partitioner must accept every sharding, the compiled module reports
+per-device memory and FLOPs/bytes, and the HLO text gives the collective
+schedule for §Roofline. Results land in experiments/dryrun/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--head midx]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import LM_SHAPES, ShapeConfig, shape_by_name
+from repro.dist import (param_specs, zero1_specs, batch_spec, index_specs,
+                        decode_cache_specs)
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh, mesh_dp_tp
+from repro.optim import adamw
+from repro.optim.optimizers import OptState
+
+# pure full-attention archs skip long_500k (quadratic @ 500k — DESIGN §5)
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+HW = {  # TPU v5e-class target
+    "peak_flops": 197e12,       # bf16 / chip
+    "hbm_bw": 819e9,            # bytes/s / chip
+    "ici_bw": 50e9,             # bytes/s / link
+}
+
+
+def cells_for(arch: str) -> list[ShapeConfig]:
+    cfg = get_config(arch)
+    out = []
+    for s in LM_SHAPES:
+        if s.name == "long_500k" and cfg.family not in LONG_OK_FAMILIES:
+            continue
+        out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "u2": 1, "s2": 1, "f8e4m3fn": 1,
+                "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _first_shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str.split(" ")[0].strip("()")):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{?\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:                       # iota format [num_groups, group_size]
+        return int(m.group(2))
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> dict:
+    """Per-device collective traffic, ring-model bytes per op kind."""
+    out = {k: {"count": 0, "bytes": 0.0} for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _INSTR_RE.match(stripped)
+        if not m:
+            continue
+        rhs = m.group(2)
+        kind = None
+        for k in _COLL_KINDS:
+            if f" {k}(" in rhs or rhs.startswith(f"{k}(") or \
+               f" {k}-start(" in rhs or rhs.startswith(f"{k}-start("):
+                kind = k
+                break
+        if kind is None:
+            continue
+        size = _first_shape_bytes(rhs)
+        n = max(_group_size(rhs, default_group), 1)
+        ring = (n - 1) / n
+        if kind == "all-reduce":
+            traffic = 2.0 * size * ring
+        elif kind == "all-gather":
+            traffic = size * ring                   # size = gathered result
+        elif kind == "reduce-scatter":
+            traffic = size * (n - 1)                # size = scattered result
+        elif kind == "all-to-all":
+            traffic = size * ring
+        else:                                       # collective-permute
+            traffic = float(size)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += traffic
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell runners
+# ---------------------------------------------------------------------------
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def _with_sharding(abs_tree, sharding_tree):
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abs_tree, sharding_tree)
+
+
+def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
+               head_mode: str = "midx", layers_override: int | None = None,
+               family_twin: bool = False, attn_impl: str = "flash",
+               moe_impl: str = "shard_map", pad_heads: bool = False,
+               proposal: str | None = None):
+    import dataclasses as _dc
+    from repro.models import attention as attn_mod
+    from repro.models import moe as moe_mod
+    attn_mod.set_impl(attn_impl)
+    cfg = get_config(arch)
+    if proposal is not None:
+        cfg = cfg.with_head(proposal=proposal)
+    if pad_heads and cfg.num_heads and (cfg.num_heads % 16 or
+                                        cfg.num_kv_heads % 16):
+        # beyond-paper §Perf: pad Q/KV heads to multiples of the model axis so
+        # attention weights shard instead of replicating (MaxText-style).
+        hd = cfg.resolved_head_dim
+        cfg = _dc.replace(cfg,
+                          num_heads=((cfg.num_heads + 15) // 16) * 16,
+                          num_kv_heads=((cfg.num_kv_heads + 15) // 16) * 16,
+                          head_dim=hd)
+    if layers_override is not None:
+        cfg = _dc.replace(
+            cfg, num_layers=layers_override,
+            encoder_layers=min(cfg.encoder_layers, layers_override))
+    if family_twin:
+        # strip the conditional block (cross-attn / shared-attn) to isolate
+        # its cost: vlm -> dense twin, hybrid -> ssm twin (same dims).
+        if cfg.family == "vlm":
+            cfg = _dc.replace(cfg, family="dense", cross_attn_every=0,
+                              num_image_tokens=0)
+        elif cfg.family == "hybrid":
+            cfg = _dc.replace(cfg, family="ssm", hybrid_attn_every=0)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp, tp = mesh_dp_tp(mesh)
+    if moe_impl == "shard_map" and cfg.family == "moe" and \
+            shape.global_batch % dp == 0:
+        moe_mod.set_moe_mesh(mesh, ("pod", "data") if multi_pod else ("data",),
+                             "model")
+    else:
+        moe_mod.set_moe_mesh(None)
+    window = cfg.sliding_window if (shape.name == "long_500k") else None
+
+    p_abs = steps_mod.abstract_params(cfg)
+    p_specs = param_specs(cfg, p_abs, tp=tp)
+    p_sh = _named(mesh, p_specs)
+    bspec = batch_spec(multi_pod, global_batch=shape.global_batch, dp=dp)
+    repl = NamedSharding(mesh, P())
+
+    with mesh:
+        if shape.kind == "train":
+            opt = adamw(1e-4)
+            opt_abs = jax.eval_shape(opt.init, p_abs)
+            z_specs = zero1_specs(p_specs, p_abs, dp=dp,
+                                  data_axes=("pod", "data") if multi_pod
+                                  else ("data",))
+            opt_specs = OptState(P(), z_specs,
+                                 z_specs if opt_abs.nu is not None else None)
+            opt_sh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), opt_specs)
+            idx_abs = steps_mod.abstract_index(cfg, p_abs)
+            idx_sh = _named(mesh, index_specs(idx_abs))
+            bsh = NamedSharding(mesh, bspec)
+            batch = steps_mod.batch_struct(cfg, shape, batch_sharding=bsh)
+            fn = steps_mod.make_train_step(cfg, opt, head_mode=head_mode,
+                                           window=window)
+            jitted = jax.jit(fn,
+                             out_shardings=(p_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            args = (_with_sharding(p_abs, p_sh),
+                    _with_sharding(opt_abs, opt_sh),
+                    _with_sharding(idx_abs, idx_sh),
+                    batch, steps_mod.key_struct(repl))
+        elif shape.kind == "prefill":
+            bsh = NamedSharding(mesh, bspec)
+            batch = steps_mod.batch_struct(cfg, shape, batch_sharding=bsh)
+            fn = steps_mod.make_prefill_step(cfg, window=window)
+            jitted = jax.jit(fn)
+            args = (_with_sharding(p_abs, p_sh), batch)
+        else:  # decode
+            cache_abs = steps_mod.abstract_decode_state(
+                cfg, p_abs, shape.global_batch, shape.seq_len, window=window)
+            c_specs = decode_cache_specs(cfg, cache_abs, tp=tp,
+                                         multi_pod=multi_pod,
+                                         global_batch=shape.global_batch,
+                                         dp_degree=dp)
+            c_sh = _named(mesh, c_specs)
+            tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32,
+                                       sharding=NamedSharding(mesh, bspec))
+            pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)
+            fn = steps_mod.make_decode_step(cfg, window=window)
+            jitted = jax.jit(fn, out_shardings=(None, c_sh),
+                             donate_argnums=(1,))
+            args = (_with_sharding(p_abs, p_sh),
+                    _with_sharding(cache_abs, c_sh),
+                    tok, pos, steps_mod.key_struct(repl))
+
+        t0 = time.time()
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return cfg, mesh, lowered, compiled, {"lower_s": t_lower,
+                                          "compile_s": t_compile}
+
+
+def analyze(cfg, mesh, lowered, compiled, *, shape: ShapeConfig,
+            head_mode: str) -> dict:
+    dp, tp = mesh_dp_tp(mesh)
+    chips = dp * tp
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, default_group=tp)
+
+    # roofline terms (per-device program => per-chip flops/bytes)
+    t_compute = flops / HW["peak_flops"]
+    t_memory = bytes_acc / HW["hbm_bw"]
+    t_coll = coll["total_bytes"] / HW["ici_bw"]
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+        "head": head_mode, "mesh": list(mesh.devices.shape),
+        "chips": chips,
+        "flops_per_device": flops, "bytes_per_device": bytes_acc,
+        "memory": mem_d, "collectives": coll,
+        "roofline": {"compute_s": t_compute, "memory_s": t_memory,
+                     "collective_s": t_coll, "dominant": dominant},
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             head_mode: str = "midx", out_dir: str = "experiments/dryrun",
+             save_hlo: bool = False, attn_impl: str = "flash",
+             moe_impl: str = "shard_map", pad_heads: bool = False) -> dict:
+    shape = shape_by_name(shape_name)
+    cfg, mesh, lowered, compiled, times = lower_cell(
+        arch, shape, multi_pod=multi_pod, head_mode=head_mode,
+        attn_impl=attn_impl, moe_impl=moe_impl, pad_heads=pad_heads)
+    rec = analyze(cfg, mesh, lowered, compiled, shape=shape,
+                  head_mode=head_mode)
+    rec.update(times)
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}__{head_mode}"
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if save_hlo:
+        with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(compiled.as_text())
+    r = rec["roofline"]
+    print(f"[dryrun] {tag}: dominant={r['dominant']} "
+          f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+          f"collective={r['collective_s']:.4f}s "
+          f"(lower {times['lower_s']:.1f}s compile {times['compile_s']:.1f}s)",
+          flush=True)
+    return rec
+
+
+def calibrate_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                   head_mode: str = "midx",
+                   out_dir: str = "experiments/dryrun",
+                   attn_impl: str = "flash",
+                   moe_impl: str = "shard_map",
+                   pad_heads: bool = False) -> dict:
+    """Scan-multiplier calibration (DESIGN/EXPERIMENTS §Roofline methodology).
+
+    XLA's cost_analysis counts a while-loop body ONCE, not x trip-count, so a
+    layers-scanned model under-reports flops/collectives by ~L. We compile
+    L∈{0,1,2} variants of the same cell; the linear model
+        flops(L)  = f0 + L·(f1 − f0)
+        coll(L)   = c0 + L·(c1 − c0)
+        bytes(L)  = b1 + (L−1)·(b2 − b1)
+    recovers the true totals (bytes uses the {1,2} pair since raw bytes do
+    scale with trip count). lax.cond branches are both counted, so hybrid/vlm
+    conditional blocks are overcounted by `every`x inside the body —
+    roofline.py subtracts the analytic overcount.
+    """
+    shape = shape_by_name(shape_name)
+    out = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single", "head": head_mode,
+           "variants": {}}
+
+    def one(lv, twin):
+        cfg, mesh, lowered, compiled, times = lower_cell(
+            arch, shape, multi_pod=multi_pod, head_mode=head_mode,
+            layers_override=lv, family_twin=twin, attn_impl=attn_impl,
+            moe_impl=moe_impl, pad_heads=pad_heads)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        coll = parse_collectives(compiled.as_text(),
+                                 default_group=mesh_dp_tp(mesh)[1])
+        return {
+            "flops": float(cost.get("flops", 0.0) or 0.0),
+            "bytes": float(cost.get("bytes accessed", 0.0) or 0.0),
+            "collective_bytes": coll["total_bytes"],
+            "compile_s": times["compile_s"],
+        }
+
+    for lv in (0, 1, 2):
+        out["variants"][str(lv)] = one(lv, False)
+    if get_config(arch).family in ("vlm", "hybrid"):
+        # twin variants isolate the cond-block cost (counted every layer by
+        # cost_analysis; actually applied every `every` layers)
+        for lv in (0, 1):
+            out["variants"][f"twin{lv}"] = one(lv, True)
+    os.makedirs(out_dir, exist_ok=True)
+    tag = (f"{arch}__{shape_name}__"
+           f"{'multi' if multi_pod else 'single'}__{head_mode}__calib")
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[calib] {tag}: " + " ".join(
+        f"L{lv}:f={v['flops']:.3g}" for lv, v in out["variants"].items()),
+        flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--head", choices=("midx", "full", "both"), default="midx")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="compile L∈{0,1,2} variants for scan-flops calibration")
+    ap.add_argument("--attn", choices=("flash", "autodiff"), default="flash",
+                    help="autodiff = paper-naive baseline (§Perf before)")
+    ap.add_argument("--moe", choices=("shard_map", "vmap"),
+                    default="shard_map")
+    args = ap.parse_args()
+
+    archs = ([args.arch] if args.arch else
+             [a for a in ARCHS if a != "paper-lm"])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    heads = {"midx": ["midx"], "full": ["full"],
+             "both": ["midx", "full"]}[args.head]
+
+    failures = []
+    for arch in archs:
+        shapes = ([shape_by_name(args.shape)] if args.shape
+                  else cells_for(arch))
+        for shape in shapes:
+            for mp in meshes:
+                for hm in heads:
+                    if shape.kind != "train" and hm == "full" and \
+                            len(heads) > 1:
+                        continue      # head only differs for training
+                    try:
+                        if args.calibrate:
+                            calibrate_cell(arch, shape.name, multi_pod=mp,
+                                           head_mode=hm, out_dir=args.out,
+                                           attn_impl=args.attn,
+                                           moe_impl=args.moe)
+                        else:
+                            run_cell(arch, shape.name, multi_pod=mp,
+                                     head_mode=hm, out_dir=args.out,
+                                     save_hlo=args.save_hlo,
+                                     attn_impl=args.attn, moe_impl=args.moe)
+                    except Exception as e:
+                        failures.append((arch, shape.name, mp, hm, str(e)))
+                        print(f"[dryrun] FAIL {arch} {shape.name} "
+                              f"multi={mp} head={hm}: {e}", flush=True)
+                        traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("[dryrun] all cells passed")
+
+
+if __name__ == "__main__":
+    main()

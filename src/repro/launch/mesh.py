@@ -1,0 +1,24 @@
+"""Production mesh builders (functions, never module-level state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; 2 pods when multi_pod. 512 placeholder devices are
+    provided by the dry-run's XLA_FLAGS (host-platform device count)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_dp_tp(mesh) -> tuple[int, int]:
+    """(total data-parallel degree incl. pod axis, tensor-parallel degree)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    return dp, sizes.get("model", 1)

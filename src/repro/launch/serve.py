@@ -1,0 +1,104 @@
+"""Serving driver: batched prefill + decode with KV caches.
+
+Two decode heads:
+  --head full : exact [B, V] logits each step (default)
+  --head midx : MIDX-approximate sampling head — no [B, V] matrix; draws
+                candidates through the index and rescores exactly
+                (beyond-paper application of the paper's sampler).
+
+CPU demo:
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-lm --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import steps as steps_mod
+from repro.models import (decode_step, forward, heads, init_decode_state,
+                          init_params, logits_full)
+
+
+def serve(cfg, *, batch: int, prompt_len: int, gen_tokens: int,
+          head: str = "full", seed: int = 0, window=None):
+    key = jax.random.PRNGKey(seed)
+    k_init, k_idx, k_gen = jax.random.split(key, 3)
+    params = init_params(cfg, k_init)
+    max_seq = prompt_len + gen_tokens + 1
+
+    kw = {}
+    if cfg.family == "vlm":
+        kw["image_emb"] = jnp.zeros((batch, cfg.num_image_tokens, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        kw["frames"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+
+    prompts = jax.random.randint(k_gen, (batch, prompt_len), 0, cfg.vocab_size)
+
+    # ---- prefill: teacher-forced pass to build the cache token by token
+    # (the production prefill uses the batched forward; here we keep the cache
+    #  layout identical to decode for simplicity and verify vs. forward())
+    state = init_decode_state(cfg, params, batch, max_seq, window=window, **kw)
+    index = heads.init_head_state(cfg, params, k_idx) if head == "midx" else None
+
+    @jax.jit
+    def step_fn(params, state, token, pos, key):
+        hidden, state = decode_step(cfg, params, token, pos, state,
+                                    window=window)
+        if head == "midx":
+            out = heads.midx_decode_head(cfg, params, index, hidden, key)
+            nxt = out.token
+        else:
+            logits = logits_full(cfg, params, hidden)
+            # restrict to the real vocab (padded tail never sampled)
+            logits = logits[:, : cfg.vocab_size]
+            nxt = jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+        return nxt, state
+
+    toks = prompts
+    nxt = prompts[:, 0]
+    t0 = time.time()
+    for pos in range(prompt_len - 1):
+        _, state = step_fn(params, state, prompts[:, pos], jnp.int32(pos),
+                           jax.random.fold_in(k_gen, pos))
+    nxt = prompts[:, -1]
+    generated = []
+    for i in range(gen_tokens):
+        pos = prompt_len - 1 + i
+        nxt, state = step_fn(params, state, nxt, jnp.int32(pos),
+                             jax.random.fold_in(k_gen, 1000 + i))
+        generated.append(nxt)
+    gen = jnp.stack(generated, axis=1)
+    jax.block_until_ready(gen)
+    dt = time.time() - t0
+    total = batch * (prompt_len - 1 + gen_tokens)
+    print(f"[serve] head={head} batch={batch} prompt={prompt_len} "
+          f"gen={gen_tokens}: {dt:.2f}s ({1e3 * dt / max(total,1):.2f} ms/token)")
+    return np.asarray(jnp.concatenate([toks, gen], axis=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-lm")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--head", default="full", choices=("full", "midx"))
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    out = serve(cfg, batch=args.batch, prompt_len=args.prompt,
+                gen_tokens=args.tokens, head=args.head)
+    print("[serve] sample output ids:", out[0, : args.prompt + 8].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Step functions (train / prefill / decode) + abstract input specs.
+
+These are what both the real drivers (train.py / serve.py) and the multi-pod
+dry-run (dryrun.py) lower. Everything is a pure function of
+(params, opt/index/cache state, batch, rng) — no host callbacks in the hot
+path; the MIDX index refresh is a separate jitted function on its own cadence.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import (decode_step, forward, heads, init_decode_state,
+                          init_params, logits_full)
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+def _model_extras(cfg: ModelConfig, batch: dict) -> dict:
+    kw = {}
+    if cfg.family == "vlm":
+        kw["image_emb"] = batch["image_emb"]
+    if cfg.family == "audio":
+        kw["frames"] = batch["frames"]
+    return kw
+
+
+def make_loss_fn(cfg: ModelConfig, *, head_mode: Optional[str] = None,
+                 window: Optional[int] = None) -> Callable:
+    """loss(params, index, batch, key) -> (loss, metrics)."""
+    mode = head_mode or cfg.head.mode
+
+    def loss_fn(params, index, batch, key):
+        out = forward(cfg, params, batch["tokens"], window=window,
+                      **_model_extras(cfg, batch))
+        if mode == "full":
+            ce = heads.loss_full(cfg, params, out["hidden"], batch["labels"])
+        else:
+            ce = heads.loss_midx(cfg, params, index, out["hidden"],
+                                 batch["labels"], key)
+        loss = ce + cfg.router_aux_weight * out["aux_loss"]
+        return loss, {"ce": ce, "aux": out["aux_loss"]}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    head_mode: Optional[str] = None,
+                    window: Optional[int] = None,
+                    clip_norm: float = 1.0) -> Callable:
+    loss_fn = make_loss_fn(cfg, head_mode=head_mode, window=window)
+
+    def train_step(params, opt_state, index, batch, key):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, index, batch, key)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = {**metrics, "loss": loss, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, window: Optional[int] = None):
+    """Full-sequence forward -> last-position logits (serving prefill)."""
+
+    def prefill_step(params, batch):
+        out = forward(cfg, params, batch["tokens"], window=window,
+                      **_model_extras(cfg, batch))
+        last = out["hidden"][:, -1, :]
+        return logits_full(cfg, params, last)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, window: Optional[int] = None,
+                     sample: bool = True):
+    """One new token against a seq_len KV cache (serving decode)."""
+
+    def serve_step(params, cache, token, pos, key):
+        hidden, cache = decode_step(cfg, params, token, pos, cache,
+                                    window=window)
+        logits = logits_full(cfg, params, hidden)
+        if sample:
+            nxt = jax.random.categorical(key, logits, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    return serve_step
+
+
+def make_refresh_step(cfg: ModelConfig):
+    def refresh(params, index, key):
+        return heads.refresh_head_state(cfg, params, index, key)
+    return refresh
+
+
+# ---------------------------------------------------------------------------
+# abstract specs for the dry-run
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig,
+                 batch_sharding=None, replicated=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a train/prefill
+    step (weak-type-correct, shardable, no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    mk = functools.partial(jax.ShapeDtypeStruct)
+    batch = {
+        "tokens": mk((b, s), jnp.int32, sharding=batch_sharding),
+        "labels": mk((b, s), jnp.int32, sharding=batch_sharding),
+    }
+    if cfg.family == "vlm":
+        batch["image_emb"] = mk((b, cfg.num_image_tokens, cfg.d_model),
+                                jnp.dtype(cfg.dtype), sharding=batch_sharding)
+    if cfg.family == "audio":
+        batch["frames"] = mk((b, cfg.encoder_seq, cfg.d_model),
+                             jnp.dtype(cfg.dtype), sharding=batch_sharding)
+    if shape.kind == "prefill":
+        batch.pop("labels")
+    return batch
+
+
+def key_struct(sharding=None):
+    return jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=sharding)
+
+
+def abstract_params(cfg: ModelConfig, cast_dtype: Optional[str] = None):
+    out = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    if cast_dtype is not None:
+        dt = jnp.dtype(cast_dtype)
+        out = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, dt), out)
+    return out
+
+
+def abstract_decode_state(cfg: ModelConfig, params_abs, bsz: int,
+                          max_seq: int, window: Optional[int] = None):
+    def build(params):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["image_emb"] = jnp.zeros((bsz, cfg.num_image_tokens, cfg.d_model),
+                                        jnp.dtype(cfg.dtype))
+        if cfg.family == "audio":
+            kw["frames"] = jnp.zeros((bsz, cfg.encoder_seq, cfg.d_model),
+                                     jnp.dtype(cfg.dtype))
+        return init_decode_state(cfg, params, bsz, max_seq, window=window, **kw)
+
+    return jax.eval_shape(build, params_abs)
+
+
+def abstract_index(cfg: ModelConfig, params_abs):
+    def build(params):
+        return heads.init_head_state(cfg, params, jax.random.PRNGKey(0))
+    return jax.eval_shape(build, params_abs)

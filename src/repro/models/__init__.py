@@ -1,0 +1,4 @@
+from repro.models.model import (init_params, forward, logits_full,
+                                class_embeddings)
+from repro.models.decode import init_decode_state, decode_step
+from repro.models import heads

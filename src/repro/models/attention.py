@@ -1,0 +1,290 @@
+"""GQA attention: causal / bidirectional / cross / sliding-window, qk-norm.
+
+Two execution paths:
+  - direct einsum (S ≤ direct_threshold): materializes [B,KV,G,Sq,Sk] scores
+  - chunked online-softmax (pure-JAX flash): lax.map over query chunks with a
+    lax.scan over KV chunks carrying (acc, m, l). Bounded memory at 32k/500k.
+The Pallas flash kernel (repro.kernels.flash_attention) is the TPU-optimized
+replacement for the chunked path; the XLA paths here are what the multi-pod
+dry-run compiles (DESIGN §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, norm_init, apply_norm, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, qk_norm: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, num_heads * head_dim),
+        "wk": dense_init(ks[1], d_model, num_kv_heads * head_dim),
+        "wv": dense_init(ks[2], d_model, num_kv_heads * head_dim),
+        "wo": dense_init(ks[3], num_heads * head_dim, d_model),
+    }
+    if qk_norm:
+        p["q_norm"] = norm_init(head_dim)
+        p["k_norm"] = norm_init(head_dim)
+    return p
+
+
+def project_qkv(p, x, num_heads: int, num_kv_heads: int, head_dim: int,
+                cos=None, sin=None, qk_norm: bool = False, eps: float = 1e-5):
+    """x [B,S,D] -> q [B,S,H,hd], k/v [B,S,KV,hd] with RoPE + optional qk-norm."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, num_heads, head_dim)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, num_kv_heads, head_dim)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, num_kv_heads, head_dim)
+    if qk_norm:
+        q = apply_norm(p["q_norm"], q, eps=eps)
+        k = apply_norm(p["k_norm"], k, eps=eps)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _scores_mask(sq: int, sk: int, q_offset, causal: bool,
+                 window: int | None) -> jax.Array | None:
+    """Boolean [Sq, Sk] allowed-mask, or None if fully allowed."""
+    if not causal and window is None:
+        return None
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    return ok
+
+
+def _direct_attention(q, k, v, causal: bool, window: int | None, q_offset=0):
+    """q [B,Sq,H,hd]; k,v [B,Sk,KV,hd] -> [B,Sq,H,hd]. GQA grouped einsum."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqkgh,bmkh->bkgqm", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    mask = _scores_mask(sq, k.shape[1], q_offset, causal, window)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqm,bmkh->bqkgh", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _block_mask(iq, ik, q_chunk, kv_chunk, q_offset, causal, window):
+    qi = iq * q_chunk + jnp.arange(q_chunk)[:, None] + q_offset
+    kj = ik * kv_chunk + jnp.arange(kv_chunk)[None, :]
+    ok = jnp.ones((q_chunk, kv_chunk), bool)
+    if causal:
+        ok &= kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    return ok
+
+
+def _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
+    """Online-softmax forward. Returns (out [b,sq,h,hd], lse [b,kv,g,sq]).
+
+    Memory: one (q_chunk × kv_chunk) score block at a time; per-chunk casts
+    so no fp32 copy of the full KV ever materializes.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = hd ** -0.5
+    qg = q.reshape(b, sq, kv, g, hd)
+
+    def q_block(iq):
+        qs = (jax.lax.dynamic_slice_in_dim(qg, iq * q_chunk, q_chunk, axis=1)
+              .astype(jnp.float32) * scale)
+
+        def kv_step(carry, ik):
+            acc, m, l = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, ik * kv_chunk, kv_chunk,
+                                              axis=1).astype(jnp.float32)
+            vs = jax.lax.dynamic_slice_in_dim(v, ik * kv_chunk, kv_chunk,
+                                              axis=1).astype(jnp.float32)
+            s = jnp.einsum("bqkgh,bmkh->bkgqm", qs, ks)
+            ok = _block_mask(iq, ik, q_chunk, kv_chunk, q_offset, causal,
+                             window)
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + \
+                jnp.einsum("bkgqm,bmkh->bkgqh", p, vs)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kv, g, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))                 # [b,kv,g,qc]
+        return jnp.moveaxis(out, 3, 1).reshape(b, q_chunk, h, hd), lse
+
+    outs, lses = jax.lax.map(q_block, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd).astype(q.dtype)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, kv, g, sq)   # [b,kv,g,sq]
+    return out, lse
+
+
+def _flash_bwd(causal, window, q_chunk, kv_chunk, q_offset, res, d_out):
+    """Blockwise recompute backward (flash-attention bwd formulas).
+
+    ds = p ⊙ (d_o·vᵀ − rowsum(d_o ⊙ o)); dq += ds·k; dk += dsᵀ·q; dv += pᵀ·d_o.
+    Temp memory is one score block; nothing from the forward scan is saved
+    except (out, lse).
+    """
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = hd ** -0.5
+    qg = q.reshape(b, sq, kv, g, hd)
+    og = out.reshape(b, sq, kv, g, hd)
+    dg = d_out.reshape(b, sq, kv, g, hd)
+
+    def q_block(carry, iq):
+        dk_acc, dv_acc = carry
+        qs = (jax.lax.dynamic_slice_in_dim(qg, iq * q_chunk, q_chunk, axis=1)
+              .astype(jnp.float32) * scale)
+        os = jax.lax.dynamic_slice_in_dim(og, iq * q_chunk, q_chunk,
+                                          axis=1).astype(jnp.float32)
+        ds_out = jax.lax.dynamic_slice_in_dim(dg, iq * q_chunk, q_chunk,
+                                              axis=1).astype(jnp.float32)
+        lse_q = jax.lax.dynamic_slice_in_dim(lse, iq * q_chunk, q_chunk,
+                                             axis=3)               # [b,kv,g,qc]
+        # delta = rowsum(d_o ⊙ o)  [b,kv,g,qc]
+        delta = jnp.einsum("bqkgh,bqkgh->bkgq", ds_out, os)
+
+        def kv_step(carry, ik):
+            dq_blk, dk_acc, dv_acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, ik * kv_chunk, kv_chunk,
+                                              axis=1).astype(jnp.float32)
+            vs = jax.lax.dynamic_slice_in_dim(v, ik * kv_chunk, kv_chunk,
+                                              axis=1).astype(jnp.float32)
+            s = jnp.einsum("bqkgh,bmkh->bkgqm", qs, ks)
+            ok = _block_mask(iq, ik, q_chunk, kv_chunk, q_offset, causal,
+                             window)
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_q[..., None])                     # [b,kv,g,qc,m]
+            dp = jnp.einsum("bqkgh,bmkh->bkgqm", ds_out, vs)
+            ds = p * (dp - delta[..., None])
+            dq_blk = dq_blk + scale * jnp.einsum("bkgqm,bmkh->bqkgh", ds, ks)
+            dk_blk = jnp.einsum("bkgqm,bqkgh->bmkh", ds, qs)
+            dv_blk = jnp.einsum("bkgqm,bqkgh->bmkh", p, ds_out)
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc, jax.lax.dynamic_slice_in_dim(
+                    dk_acc, ik * kv_chunk, kv_chunk, axis=1) + dk_blk,
+                ik * kv_chunk, axis=1)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc, jax.lax.dynamic_slice_in_dim(
+                    dv_acc, ik * kv_chunk, kv_chunk, axis=1) + dv_blk,
+                ik * kv_chunk, axis=1)
+            return (dq_blk, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((b, q_chunk, kv, g, hd), jnp.float32)
+        (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_blk
+
+    dk0 = jnp.zeros((b, sk, kv, hd), jnp.float32)
+    dv0 = jnp.zeros((b, sk, kv, hd), jnp.float32)
+    (dk, dv), dq_blocks = jax.lax.scan(q_block, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(b, sq, h, hd)
+    # note: dk above is the grad wrt unscaled k since s used scaled q.
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_attention_xla(q, k, v, causal, window, q_chunk, kv_chunk,
+                         q_offset):
+    return _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk, q_offset)[0]
+
+
+def _flash_attention_fwd(q, k, v, causal, window, q_chunk, kv_chunk,
+                         q_offset):
+    out, lse = _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk,
+                          q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_attention_bwd(causal, window, q_chunk, kv_chunk, q_offset, res,
+                         d_out):
+    return _flash_bwd(causal, window, q_chunk, kv_chunk, q_offset, res, d_out)
+
+
+_flash_attention_xla.defvjp(_flash_attention_fwd, _flash_attention_bwd)
+
+
+# Global implementation switch: "flash" = custom-vjp blockwise-recompute
+# backward (optimized); "autodiff" = differentiate through the online-softmax
+# scan (paper-naive baseline — saves O(nk) carries; §Perf iteration 1).
+_IMPL = "flash"
+
+
+def set_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("flash", "autodiff"), impl
+    _IMPL = impl
+
+
+def _chunked_autodiff(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
+    return _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk, q_offset)[0]
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              q_offset=0, direct_threshold: int = 1024,
+              q_chunk: int = 512, kv_chunk: int = 1024):
+    """Dispatch between direct and chunked (custom-vjp flash) paths.
+
+    The flash path differentiates with the blockwise-recompute backward —
+    autodiff-through-scan would save the online-softmax carries for every kv
+    block (O(nk) × accumulator), which dominated train-step temp memory
+    (EXPERIMENTS.md §Perf iteration 1).
+    """
+    sq, sk = q.shape[1], k.shape[1]
+    if max(sq, sk) <= direct_threshold or sq % q_chunk or sk % kv_chunk:
+        return _direct_attention(q, k, v, causal, window, q_offset)
+    if _IMPL == "autodiff":
+        return _chunked_autodiff(q, k, v, causal, window, q_chunk, kv_chunk,
+                                 q_offset)
+    return _flash_attention_xla(q, k, v, causal, window, q_chunk, kv_chunk,
+                                q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None):
+    """Single-token decode. q [B,1,H,hd]; caches [B,Smax,KV,hd]; pos scalar.
+
+    Masks cache entries beyond `pos` (and outside the sliding window).
+    """
+    b, _, h, hd = q.shape
+    smax, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, hd).astype(jnp.float32) * hd ** -0.5
+    scores = jnp.einsum("bqkgh,bmkh->bkgqm", qg, k_cache.astype(jnp.float32))
+    j = jnp.arange(smax)
+    ok = j <= pos
+    if window is not None:
+        ok &= j > pos - window
+    scores = jnp.where(ok[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqm,bmkh->bqkgh", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, hd)

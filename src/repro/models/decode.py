@@ -1,0 +1,265 @@
+"""Single-token decode paths with KV caches / SSM states for every family.
+
+Cache layout (stacked over layers so the layer scan consumes them as xs and
+emits the updated cache as ys):
+  attention:  k/v [L, B, Smax, KV, hd]
+  ssm:        conv [L, B, W-1, conv_dim], ssm [L, B, H, N, P]
+  hybrid:     ssm states + a ring-buffer cache for the weight-shared attention
+              block: [A, B, Wring, KV, hd] (A = #applications) + slot positions
+  vlm/audio:  self cache + precomputed read-only cross K/V
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import model as model_mod
+from repro.models.layers import apply_mlp, apply_norm, rope_angles, apply_rope
+
+
+def _cache_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _attn_cache(cfg, n_layers, bsz, max_seq):
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (n_layers, bsz, max_seq, kvh, hd)
+    return {"k": jnp.zeros(shape, _cache_dtype(cfg)),
+            "v": jnp.zeros(shape, _cache_dtype(cfg))}
+
+
+def _ssm_cache(cfg, n_layers, bsz):
+    d_inner = cfg.ssm_d_inner
+    nheads = cfg.ssm_heads
+    w = cfg.ssm_conv_width - 1
+    dt = _cache_dtype(cfg)
+    return {
+        "conv_x": jnp.zeros((n_layers, bsz, w, d_inner), dt),
+        "conv_b": jnp.zeros((n_layers, bsz, w, cfg.ssm_state), dt),
+        "conv_c": jnp.zeros((n_layers, bsz, w, cfg.ssm_state), dt),
+        "ssm": jnp.zeros((n_layers, bsz, nheads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def _cross_kv(cfg, attn_params_stacked, src):
+    """Precompute cross K/V for stacked blocks. src [B,Ssrc,D] -> [L,B,Ssrc,KV,hd]."""
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    b, ssrc, _ = src.shape
+
+    def one(ap):
+        k = (src @ ap["wk"].astype(src.dtype)).reshape(b, ssrc, kvh, hd)
+        v = (src @ ap["wv"].astype(src.dtype)).reshape(b, ssrc, kvh, hd)
+        return k, v
+
+    return jax.vmap(one)(attn_params_stacked)
+
+
+def init_decode_state(cfg: ModelConfig, params: dict, bsz: int, max_seq: int,
+                      *, image_emb: Optional[jax.Array] = None,
+                      frames: Optional[jax.Array] = None,
+                      window: Optional[int] = None) -> dict:
+    state: dict = {}
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        state.update(_attn_cache(cfg, cfg.num_layers, bsz, max_seq))
+    if cfg.family in ("ssm", "hybrid"):
+        state.update(_ssm_cache(cfg, cfg.num_layers, bsz))
+    if cfg.family == "hybrid":
+        napps = max(1, cfg.num_layers // cfg.hybrid_attn_every)
+        wring = min(max_seq, window or max_seq)
+        kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        state["shared_k"] = jnp.zeros((napps, bsz, wring, kvh, hd), _cache_dtype(cfg))
+        state["shared_v"] = jnp.zeros((napps, bsz, wring, kvh, hd), _cache_dtype(cfg))
+        state["slot_pos"] = jnp.full((wring,), -1, jnp.int32)
+    if cfg.family == "vlm":
+        xk, xv = _cross_kv(
+            cfg, params["cross_blocks"]["xattn"],
+            image_emb.astype(_cache_dtype(cfg)))
+        state["cross_k"], state["cross_v"] = xk, xv
+    if cfg.family == "audio":
+        enc_out = model_mod._encode(cfg, params["encoder"], frames)
+        xk, xv = _cross_kv(cfg, params["blocks"]["xattn"], enc_out)
+        state["cross_k"], state["cross_v"] = xk, xv
+    return state
+
+
+def _self_attn_decode(cfg, bp, x, kc, vc, pos, cos, sin, window=None):
+    """x [B,1,D]; kc/vc [B,Smax,KV,hd]. Returns (x', kc', vc')."""
+    h = apply_norm(bp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    q, k, v = attn_mod.project_qkv(bp["attn"], h, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.resolved_head_dim,
+                                   cos, sin, cfg.qk_norm, cfg.norm_eps)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+    o = attn_mod.decode_attention(q, kc, vc, pos, window=window)
+    b = x.shape[0]
+    x = x + o.reshape(b, 1, -1) @ bp["attn"]["wo"].astype(x.dtype)
+    return x, kc, vc
+
+
+def _cross_attn_decode(cfg, bp, x, xk, xv, gated=False):
+    """Cross-attention against precomputed K/V. x [B,1,D]; xk/xv [B,Ssrc,KV,hd]."""
+    ln = bp["ln1"] if gated else bp["ln_x"]
+    h = apply_norm(ln, x, eps=cfg.norm_eps, kind=cfg.norm)
+    ap = bp["xattn"]
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    q = (h @ ap["wq"].astype(h.dtype)).reshape(b, 1, cfg.num_heads, hd)
+    o = attn_mod.decode_attention(q, xk, xv, xk.shape[1] - 1)
+    o = o.reshape(b, 1, -1) @ ap["wo"].astype(h.dtype)
+    if gated:
+        x = x + (jnp.tanh(bp["gate_attn"]) * o).astype(x.dtype)
+        h2 = apply_norm(bp["ln2"], x, eps=cfg.norm_eps, kind=cfg.norm)
+        y = apply_mlp(bp["mlp"], h2, cfg.act)
+        return x + (jnp.tanh(bp["gate_mlp"]) * y).astype(x.dtype)
+    return x + o
+
+
+def _mamba_decode(cfg, bp, x, mstate):
+    h = apply_norm(bp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    y, new = mamba_mod.decode_mamba2(
+        bp["mamba"], h, mstate,
+        d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand)
+    return x + y, new
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos,
+                state: dict, *, window: Optional[int] = None):
+    """token [B] int32, pos scalar int32 -> (hidden [B,D], new state)."""
+    dtype = _cache_dtype(cfg)
+    x = params["embed"][token][:, None, :].astype(dtype)      # [B,1,D]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((x.shape[0], 1), pos)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    layer_idx = jnp.arange(cfg.num_layers)
+
+    if cfg.family in ("dense", "moe"):
+        def body(carry, inp):
+            x = carry
+            bp, kc, vc, _ = inp
+            x, kc, vc = _self_attn_decode(cfg, bp, x, kc, vc, pos, cos, sin,
+                                          window)
+            x, _ = model_mod._apply_ffn_part(cfg, bp, x)
+            return x, (kc, vc)
+
+        x, (kc, vc) = jax.lax.scan(
+            body, x, (params["blocks"], state["k"], state["v"], layer_idx))
+        state = {**state, "k": kc, "v": vc}
+
+    elif cfg.family == "ssm":
+        mkeys = ("conv_x", "conv_b", "conv_c", "ssm")
+
+        def body(carry, inp):
+            x = carry
+            bp, mstate = inp
+            x, new = _mamba_decode(cfg, bp, x, mstate)
+            return x, new
+
+        x, new_m = jax.lax.scan(
+            body, x, (params["blocks"], {k: state[k] for k in mkeys}))
+        state = {**state, **new_m}
+
+    elif cfg.family == "hybrid":
+        sp = params["shared_attn"]
+        every = cfg.hybrid_attn_every
+        wring = state["shared_k"].shape[2]
+        slot = pos % wring
+        new_slot_pos = state["slot_pos"].at[slot].set(pos)
+
+        def shared_apply(x, app_idx, sk_all, sv_all):
+            sk = jax.lax.dynamic_index_in_dim(sk_all, app_idx, 0, keepdims=False)
+            sv = jax.lax.dynamic_index_in_dim(sv_all, app_idx, 0, keepdims=False)
+            h = apply_norm(sp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
+            q, k, v = attn_mod.project_qkv(sp["attn"], h, cfg.num_heads,
+                                           cfg.num_kv_heads, hd, cos, sin)
+            sk = jax.lax.dynamic_update_slice_in_dim(sk, k.astype(sk.dtype),
+                                                     slot, axis=1)
+            sv = jax.lax.dynamic_update_slice_in_dim(sv, v.astype(sv.dtype),
+                                                     slot, axis=1)
+            # ring-buffer attention: mask slots by stored absolute position
+            b = x.shape[0]
+            kvh = cfg.num_kv_heads
+            g = cfg.num_heads // kvh
+            qg = q.reshape(b, 1, kvh, g, hd).astype(jnp.float32) * hd ** -0.5
+            scores = jnp.einsum("bqkgh,bmkh->bkgqm", qg, sk.astype(jnp.float32))
+            ok = (new_slot_pos >= 0) & (new_slot_pos <= pos)
+            if window is not None:
+                ok &= new_slot_pos > pos - window
+            scores = jnp.where(ok[None, None, None, None, :], scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1)
+            o = jnp.einsum("bkgqm,bmkh->bqkgh", probs.astype(sv.dtype), sv)
+            x = x + o.reshape(b, 1, -1) @ sp["attn"]["wo"].astype(x.dtype)
+            h2 = apply_norm(sp["ln2"], x, eps=cfg.norm_eps, kind=cfg.norm)
+            x = x + apply_mlp(sp["mlp"], h2, cfg.act)
+            sk_all = jax.lax.dynamic_update_index_in_dim(sk_all, sk, app_idx, 0)
+            sv_all = jax.lax.dynamic_update_index_in_dim(sv_all, sv, app_idx, 0)
+            return x, sk_all, sv_all
+
+        mkeys = ("conv_x", "conv_b", "conv_c", "ssm")
+
+        def body(carry, inp):
+            x, sk_all, sv_all = carry
+            bp, mstate, li = inp
+            x, new_m = _mamba_decode(cfg, bp, x, mstate)
+            app_idx = li // every
+            x, sk_all, sv_all = jax.lax.cond(
+                li % every == every - 1,
+                lambda args: shared_apply(*args),
+                lambda args: (args[0], args[2], args[3]),
+                (x, app_idx, sk_all, sv_all))
+            return (x, sk_all, sv_all), new_m
+
+        (x, sk_all, sv_all), new_m = jax.lax.scan(
+            body, (x, state["shared_k"], state["shared_v"]),
+            (params["blocks"], {k: state[k] for k in mkeys}, layer_idx))
+        state = {**state, **new_m, "shared_k": sk_all,
+                 "shared_v": sv_all, "slot_pos": new_slot_pos}
+
+    elif cfg.family == "vlm":
+        every = cfg.cross_attn_every
+        cbs = params["cross_blocks"]
+
+        def body(carry, inp):
+            x = carry
+            bp, kc, vc, li = inp
+            x, kc, vc = _self_attn_decode(cfg, bp, x, kc, vc, pos, cos, sin)
+            x, _ = model_mod._apply_ffn_part(cfg, bp, x)
+
+            def with_cross(x):
+                ci = li // every
+                cb = jax.tree_util.tree_map(
+                    lambda p: jax.lax.dynamic_index_in_dim(p, ci, 0, keepdims=False),
+                    cbs)
+                xk = jax.lax.dynamic_index_in_dim(state["cross_k"], ci, 0, keepdims=False)
+                xv = jax.lax.dynamic_index_in_dim(state["cross_v"], ci, 0, keepdims=False)
+                return _cross_attn_decode(cfg, cb, x, xk, xv, gated=True)
+            x = jax.lax.cond(li % every == every - 1, with_cross, lambda x: x, x)
+            return x, (kc, vc)
+
+        x, (kc, vc) = jax.lax.scan(
+            body, x, (params["blocks"], state["k"], state["v"], layer_idx))
+        state = {**state, "k": kc, "v": vc}
+
+    elif cfg.family == "audio":
+        def body(carry, inp):
+            x = carry
+            bp, kc, vc, xk, xv = inp
+            x, kc, vc = _self_attn_decode(cfg, bp, x, kc, vc, pos, cos, sin)
+            x = _cross_attn_decode(cfg, bp, x, xk, xv)
+            x, _ = model_mod._apply_ffn_part(cfg, bp, x)
+            return x, (kc, vc)
+
+        x, (kc, vc) = jax.lax.scan(
+            body, x, (params["blocks"], state["k"], state["v"],
+                      state["cross_k"], state["cross_v"]))
+        state = {**state, "k": kc, "v": vc}
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    return x[:, 0, :], state

@@ -1,0 +1,108 @@
+"""LM heads: full softmax vs MIDX sampled softmax (the paper's technique).
+
+Train-time losses:
+  loss_full : [T,V] logits + CE — the O(V·D) baseline the paper replaces.
+  loss_midx : MIDX-sampled CE — O((M+K²)·D) per token/sequence.
+Also `midx_head_state` management (index refresh cadence) and an approximate
+MIDX decode head (beyond-paper application: O(K²+M·D) next-token sampling).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import index as index_mod
+from repro.core import midx as midx_mod
+from repro.core.index import MultiIndex
+from repro.core.sampled_softmax import (full_softmax_loss,
+                                        sampled_softmax_loss)
+from repro.models.model import class_embeddings, logits_full
+
+
+def init_head_state(cfg: ModelConfig, params: dict, key: jax.Array) -> MultiIndex:
+    """Build the inverted multi-index over the class-embedding table."""
+    table = class_embeddings(cfg, params).astype(jnp.float32)
+    return index_mod.build(key, table, kind=cfg.head.quantizer,
+                           k=cfg.head.midx_k, iters=cfg.head.kmeans_iters,
+                           keep_residuals=False)
+
+
+def refresh_head_state(cfg: ModelConfig, params: dict, state: MultiIndex,
+                       key: jax.Array) -> MultiIndex:
+    table = class_embeddings(cfg, params).astype(jnp.float32)
+    return index_mod.refresh(state, key, table, iters=cfg.head.kmeans_iters)
+
+
+def loss_full(cfg: ModelConfig, params: dict, hidden: jax.Array,
+              labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    logits = logits_full(cfg, params, hidden)
+    # padded vocab rows never win: they are random-init but labels < V.
+    loss = full_softmax_loss(logits, labels)
+    if mask is not None:
+        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(loss)
+
+
+def loss_midx(cfg: ModelConfig, params: dict, index: MultiIndex,
+              hidden: jax.Array, labels: jax.Array, key: jax.Array,
+              mask: Optional[jax.Array] = None) -> jax.Array:
+    """MIDX sampled softmax CE. hidden [B,S,D], labels [B,S]."""
+    table = class_embeddings(cfg, params)
+    m = cfg.head.num_negatives
+    h32 = hidden.astype(jnp.float32)
+    tab32 = table.astype(jnp.float32)
+
+    pos_e = tab32[labels]                                     # [B,S,D]
+    pos_logit = jnp.sum(h32 * pos_e, axis=-1)                 # [B,S]
+
+    proposal = cfg.head.proposal
+    if proposal == "per_token":
+        # two-stage form: O(K) Gumbels per draw instead of a K² table/token
+        draw = midx_mod.sample_twostage(index, key, h32, m)   # ids [B,S,M]
+        neg_e = tab32[draw.ids]                               # [B,S,M,D]
+        neg_logits = jnp.einsum("bsd,bsmd->bsm", h32, neg_e)
+        log_q, neg_ids = draw.log_q, draw.ids
+    else:
+        sampler = (midx_mod.sample_pooled if proposal == "pooled"
+                   else midx_mod.sample_mixture)
+        draw = sampler(index, key, h32, m)                    # ids [B,M]
+        neg_e = tab32[draw.ids]                               # [B,M,D]
+        neg_logits = jnp.einsum("bsd,bmd->bsm", h32, neg_e)
+        log_q = draw.log_q[:, None, :]                        # broadcast over S
+        neg_ids = draw.ids[:, None, :]
+
+    loss = sampled_softmax_loss(pos_logit, neg_logits, log_q, neg_ids, labels,
+                                cfg.head.mask_collisions)
+    if mask is not None:
+        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(loss)
+
+
+class MidxDecodeOut(NamedTuple):
+    token: jax.Array      # [B] sampled next token
+    log_q: jax.Array      # [B] proposal log-prob
+
+
+def midx_decode_head(cfg: ModelConfig, params: dict, index: MultiIndex,
+                     hidden: jax.Array, key: jax.Array,
+                     num_candidates: int = 64,
+                     temperature: float = 1.0) -> MidxDecodeOut:
+    """Approximate next-token sampling without the [B,V] logits matrix.
+
+    Draw `num_candidates` via MIDX, rescore exactly (o_i), softmax over the
+    candidate set with IS correction — O(K² + M·D) per token (beyond-paper).
+    """
+    table = class_embeddings(cfg, params).astype(jnp.float32)
+    h = hidden.astype(jnp.float32)
+    k_draw, k_pick = jax.random.split(key)
+    draw = midx_mod.sample(index, k_draw, h, num_candidates)  # [B,M]
+    cand_e = table[draw.ids]                                  # [B,M,D]
+    logits = jnp.einsum("bd,bmd->bm", h, cand_e) / temperature
+    corrected = logits - draw.log_q                           # IS-corrected
+    pick = jax.random.categorical(k_pick, corrected, axis=-1) # [B]
+    token = jnp.take_along_axis(draw.ids, pick[:, None], axis=-1)[:, 0]
+    lq = jnp.take_along_axis(draw.log_q, pick[:, None], axis=-1)[:, 0]
+    return MidxDecodeOut(token, lq)

@@ -1,0 +1,74 @@
+"""Layer primitives: norms, MLPs, embeddings, RoPE. Pure-pytree params.
+
+Conventions: linear weights are [in, out]; params initialized fp32 and cast
+to the compute dtype inside apply; all inits take explicit PRNG keys.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return scale * jax.random.normal(key, (d_in, d_out), jnp.float32)
+
+
+def embed_init(key, n: int, d: int, scale: float = 0.02):
+    return scale * jax.random.normal(key, (n, d), jnp.float32)
+
+
+# ------------------------------------------------------------------- norms
+def norm_init(d: int, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(p, x, *, eps: float = 1e-5, kind: str = "rmsnorm"):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP
+def mlp_init(key, d: int, d_ff: int, act: str = "silu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, d, d_ff), "down": dense_init(k2, d_ff, d)}
+    if act == "silu":                     # SwiGLU
+        p["gate"] = dense_init(k3, d, d_ff)
+    return p
+
+
+def apply_mlp(p, x, act: str = "silu"):
+    dt = x.dtype
+    if act == "silu":
+        h = jax.nn.silu(x @ p["gate"].astype(dt)) * (x @ p["up"].astype(dt))
+    else:
+        h = jax.nn.gelu(x @ p["up"].astype(dt))
+    return h @ p["down"].astype(dt)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [...,] -> cos/sin [..., head_dim/2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, H, hd]; cos/sin [..., S, hd/2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)

@@ -1,0 +1,333 @@
+"""Unified model zoo: dense / MoE / SSM / hybrid / VLM / enc-dec backbones.
+
+One stacked-parameter `blocks` pytree scanned over layers (remat'd), with
+family-specific block bodies. Heterogeneous structures use lax.cond inside
+the scan (shared attention every k layers for zamba2; cross-attention blocks
+every k layers for the VLM) so compile cost stays O(1) in depth.
+
+Public API:
+  init_params(cfg, key)                  -> params pytree
+  forward(cfg, params, tokens, ...)      -> {"hidden": [B,S,D], "aux_loss": scalar}
+  class_embeddings(cfg, params)          -> [Vpad, D] table used by the head
+  init_decode_state(cfg, bsz, max_seq)   -> cache pytree
+  decode_step(cfg, params, token, pos, state, ...) -> (hidden [B,D], state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (apply_mlp, apply_norm, dense_init, embed_init,
+                                 mlp_init, norm_init, rope_angles)
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _attn_block_init(key, cfg: ModelConfig, cross: bool = False):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": norm_init(cfg.d_model, cfg.norm),
+        "attn": attn_mod.attn_init(k1, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.resolved_head_dim,
+                                   cfg.qk_norm),
+    }
+    if not cross:
+        p["ln2"] = norm_init(cfg.d_model, cfg.norm)
+        if cfg.family == "moe":
+            p["ffn"] = moe_mod.moe_init(k2, cfg.d_model, cfg.d_ff,
+                                        cfg.num_experts, cfg.shared_expert_d_ff,
+                                        cfg.act)
+        else:
+            p["ffn"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _mamba_block_init(key, cfg: ModelConfig):
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm),
+        "mamba": mamba_mod.mamba2_init(
+            key, cfg.d_model, d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+            conv_width=cfg.ssm_conv_width),
+    }
+
+
+def _shared_attn_init(key, cfg: ModelConfig):
+    """Zamba2's weight-shared attention+MLP block (applied every k layers)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm),
+        "attn": attn_mod.attn_init(k1, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.resolved_head_dim),
+        "ln2": norm_init(cfg.d_model, cfg.norm),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _stack_init(fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    keys = jax.random.split(key, 8)
+    vpad = cfg.padded_vocab
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], vpad, cfg.d_model),
+        "final_norm": norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(keys[1], vpad, cfg.d_model)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        params["blocks"] = _stack_init(
+            lambda k: _attn_block_init(k, cfg), keys[2], cfg.num_layers)
+    elif cfg.family in ("ssm", "hybrid"):
+        params["blocks"] = _stack_init(
+            lambda k: _mamba_block_init(k, cfg), keys[2], cfg.num_layers)
+    elif cfg.family == "audio":
+        params["blocks"] = _stack_init(
+            lambda k: _decoder_block_init(k, cfg), keys[2], cfg.num_layers)
+        params["encoder"] = {
+            "blocks": _stack_init(lambda k: _attn_block_init(k, cfg),
+                                  keys[3], cfg.encoder_layers),
+            "final_norm": norm_init(cfg.d_model, cfg.norm),
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _shared_attn_init(keys[4], cfg)
+    if cfg.family == "vlm":
+        n_cross = max(1, cfg.num_layers // cfg.cross_attn_every)
+        params["cross_blocks"] = _stack_init(
+            lambda k: _cross_block_init(k, cfg), keys[5], n_cross)
+    return params
+
+
+def _cross_block_init(key, cfg: ModelConfig):
+    """VLM cross-attention block: gated cross-attn + MLP (llama3.2-vision style)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm),
+        "xattn": attn_mod.attn_init(k1, cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.resolved_head_dim),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "ln2": norm_init(cfg.d_model, cfg.norm),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+def _decoder_block_init(key, cfg: ModelConfig):
+    """Whisper decoder block: self-attn + cross-attn + MLP."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm),
+        "attn": attn_mod.attn_init(k1, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.resolved_head_dim),
+        "ln_x": norm_init(cfg.d_model, cfg.norm),
+        "xattn": attn_mod.attn_init(k2, cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.resolved_head_dim),
+        "ln2": norm_init(cfg.d_model, cfg.norm),
+        "ffn": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def class_embeddings(cfg: ModelConfig, params: dict) -> jax.Array:
+    """The class-embedding table the softmax head scores against. [Vpad, D]."""
+    return params["embed"] if cfg.tie_embeddings else params["head"]
+
+
+# ===========================================================================
+# forward (train / prefill)
+# ===========================================================================
+
+def _apply_attn_part(cfg, bp, x, cos, sin, *, causal=True, window=None):
+    h = apply_norm(bp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    q, k, v = attn_mod.project_qkv(bp["attn"], h, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.resolved_head_dim,
+                                   cos, sin, cfg.qk_norm, cfg.norm_eps)
+    o = attn_mod.attention(q, k, v, causal=causal, window=window)
+    b, s, _, _ = o.shape
+    return x + o.reshape(b, s, -1) @ bp["attn"]["wo"].astype(x.dtype)
+
+
+def _apply_ffn_part(cfg, bp, x):
+    h = apply_norm(bp["ln2"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    if cfg.family == "moe":
+        if moe_mod.moe_shard_mode() is not None:
+            # production path: shard_map keeps dispatch local per data shard
+            # and psums only the TP-contracted expert outputs (§Perf iter 2)
+            y, aux = moe_mod.apply_moe_sharded(
+                bp["ffn"], h, top_k=cfg.num_experts_per_tok,
+                capacity_factor=cfg.capacity_factor, act=cfg.act)
+            return x + y, aux
+        # local path (CPU tests / single device): vmap over the batch dim so
+        # the dispatch sort/scatter never crosses sequences.
+        y, aux = jax.vmap(
+            lambda hb: moe_mod.apply_moe(bp["ffn"], hb,
+                                         top_k=cfg.num_experts_per_tok,
+                                         capacity_factor=cfg.capacity_factor,
+                                         act=cfg.act))(h)
+        return x + y, jnp.mean(aux)
+    return x + apply_mlp(bp["ffn"], h, cfg.act), jnp.float32(0.0)
+
+
+def _apply_cross_part(cfg, bp, x, kv_src, cos_q=None, gated=False):
+    """Cross-attention: queries from x, keys/values from kv_src (no RoPE on kv)."""
+    h = apply_norm(bp["ln1"] if gated else bp["ln_x"], x,
+                   eps=cfg.norm_eps, kind=cfg.norm)
+    ap = bp["xattn"]
+    hd = cfg.resolved_head_dim
+    b, s, _ = h.shape
+    q = (h @ ap["wq"].astype(h.dtype)).reshape(b, s, cfg.num_heads, hd)
+    sk = kv_src.shape[1]
+    k = (kv_src @ ap["wk"].astype(h.dtype)).reshape(b, sk, cfg.num_kv_heads, hd)
+    v = (kv_src @ ap["wv"].astype(h.dtype)).reshape(b, sk, cfg.num_kv_heads, hd)
+    o = attn_mod.attention(q, k, v, causal=False)
+    o = o.reshape(b, s, -1) @ ap["wo"].astype(h.dtype)
+    if gated:
+        x = x + (jnp.tanh(bp["gate_attn"]) * o).astype(x.dtype)
+        h2 = apply_norm(bp["ln2"], x, eps=cfg.norm_eps, kind=cfg.norm)
+        y = apply_mlp(bp["mlp"], h2, cfg.act)
+        return x + (jnp.tanh(bp["gate_mlp"]) * y).astype(x.dtype)
+    return x + o
+
+
+def _shared_attn_apply(cfg, sp, x, cos, sin, window=None):
+    h = apply_norm(sp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    q, k, v = attn_mod.project_qkv(sp["attn"], h, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.resolved_head_dim,
+                                   cos, sin)
+    o = attn_mod.attention(q, k, v, causal=True, window=window)
+    b, s, _, _ = o.shape
+    x = x + o.reshape(b, s, -1) @ sp["attn"]["wo"].astype(x.dtype)
+    h2 = apply_norm(sp["ln2"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    return x + apply_mlp(sp["mlp"], h2, cfg.act)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            image_emb: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None,
+            window: Optional[int] = None) -> dict:
+    """tokens [B,S] int32 -> {"hidden": [B,S,D], "aux_loss": scalar}.
+
+    window: optional sliding-window override for (shared) attention — used by
+    the hybrid arch at long context.
+    """
+    b, s = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    hd = cfg.resolved_head_dim
+    if cfg.family in ("ssm",):
+        cos = sin = None
+    else:
+        cos, sin = rope_angles(jnp.arange(s), hd, cfg.rope_theta)
+
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _encode(cfg, params["encoder"], frames)
+
+    aux_total = jnp.float32(0.0)
+    layer_idx = jnp.arange(cfg.num_layers)
+
+    if cfg.family in ("dense", "moe"):
+        def body(carry, inp):
+            x, aux = carry
+            bp, _ = inp
+            x = _apply_attn_part(cfg, bp, x, cos, sin, window=window)
+            x, a = _apply_ffn_part(cfg, bp, x)
+            return (x, aux + a), None
+    elif cfg.family == "ssm":
+        def body(carry, inp):
+            x, aux = carry
+            bp, _ = inp
+            h = apply_norm(bp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
+            y = mamba_mod.apply_mamba2(bp["mamba"], h, d_state=cfg.ssm_state,
+                                       head_dim=cfg.ssm_head_dim,
+                                       expand=cfg.ssm_expand, chunk=cfg.ssm_chunk)
+            return (x + y, aux), None
+    elif cfg.family == "hybrid":
+        sp = params["shared_attn"]
+        every = cfg.hybrid_attn_every
+
+        def body(carry, inp):
+            x, aux = carry
+            bp, li = inp
+            h = apply_norm(bp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
+            y = mamba_mod.apply_mamba2(bp["mamba"], h, d_state=cfg.ssm_state,
+                                       head_dim=cfg.ssm_head_dim,
+                                       expand=cfg.ssm_expand, chunk=cfg.ssm_chunk)
+            x = x + y
+            x = jax.lax.cond(
+                li % every == every - 1,
+                lambda x: _shared_attn_apply(cfg, sp, x, cos, sin, window),
+                lambda x: x, x)
+            return (x, aux), None
+    elif cfg.family == "vlm":
+        cbs = params["cross_blocks"]
+        every = cfg.cross_attn_every
+
+        def body(carry, inp):
+            x, aux = carry
+            bp, li = inp
+            x = _apply_attn_part(cfg, bp, x, cos, sin)
+            x, a = _apply_ffn_part(cfg, bp, x)
+
+            def with_cross(x):
+                cb = jax.tree_util.tree_map(
+                    lambda p: jax.lax.dynamic_index_in_dim(
+                        p, li // every, axis=0, keepdims=False), cbs)
+                return _apply_cross_part(cfg, cb, x, image_emb.astype(x.dtype),
+                                         gated=True)
+            x = jax.lax.cond(li % every == every - 1, with_cross,
+                             lambda x: x, x)
+            return (x, aux + a), None
+    elif cfg.family == "audio":
+        def body(carry, inp):
+            x, aux = carry
+            bp, _ = inp
+            x = _apply_attn_part(cfg, bp, x, cos, sin)
+            x = _apply_cross_part(cfg, bp, x, enc_out)
+            x, a = _apply_ffn_part(cfg, bp, x)
+            return (x, aux + a), None
+    else:
+        raise ValueError(cfg.family)
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    (x, aux_total), _ = jax.lax.scan(scan_body, (x, aux_total),
+                                     (params["blocks"], layer_idx))
+    x = apply_norm(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    return {"hidden": x, "aux_loss": aux_total / cfg.num_layers}
+
+
+def _encode(cfg: ModelConfig, enc_params: dict, frames: jax.Array) -> jax.Array:
+    """Whisper-style bidirectional encoder over stubbed frame embeddings."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    s = x.shape[1]
+    cos, sin = rope_angles(jnp.arange(s), cfg.resolved_head_dim, cfg.rope_theta)
+
+    def body(x, bp):
+        x = _apply_attn_part(cfg, bp, x, cos, sin, causal=False)
+        x, _ = _apply_ffn_part(cfg, bp, x)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, enc_params["blocks"])
+    return apply_norm(enc_params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
+
+
+def logits_full(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    """Full softmax head: [.., D] -> [.., Vpad] (fp32)."""
+    table = class_embeddings(cfg, params)
+    return hidden.astype(jnp.float32) @ table.T.astype(jnp.float32)

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adamw, sgd, OptState, Optimizer,
+                                    clip_by_global_norm)
+from repro.optim.schedule import cosine_schedule, linear_warmup
+from repro.optim.accumulate import accumulate_gradients

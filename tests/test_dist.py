@@ -1,0 +1,203 @@
+"""Distribution: sharding specs, multi-device integration via subprocess.
+
+Multi-device tests spawn a fresh interpreter with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (this process must keep a
+single device for the smoke tests).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.dist import param_specs, zero1_specs
+from repro.launch.steps import abstract_params
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_specs_rank_and_divisibility(name):
+    """Every spec has rank == leaf rank; sharded dims divide tp=16."""
+    cfg = get_config(name)
+    p_abs = abstract_params(cfg)
+    specs = param_specs(cfg, p_abs, tp=16)
+
+    def check(leaf, spec):
+        assert len(spec) <= leaf.ndim
+        for d, part in enumerate(spec):
+            if part is not None:
+                assert leaf.shape[d] % 16 == 0, (leaf.shape, spec)
+
+    jax.tree_util.tree_map(check, p_abs, specs)
+
+
+def test_zero1_extends_specs():
+    cfg = get_config("llama3.2-1b")
+    p_abs = abstract_params(cfg)
+    specs = param_specs(cfg, p_abs, tp=16)
+    z = zero1_specs(specs, p_abs, dp=16)
+    flat_s = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: x is None or hasattr(x, "index"))
+    flat_z = jax.tree_util.tree_leaves(z, is_leaf=lambda x: x is None or hasattr(x, "index"))
+    # at least the big embedding tables got a data axis added
+    extended = sum(1 for a, b in zip(flat_s, flat_z) if tuple(a) != tuple(b))
+    assert extended > 0
+
+
+def _run(py: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(py)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+def test_flash_decode_seq_sharded_multi_device():
+    """shard_map LSE-merge decode == single-device reference, 8 devices."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist import flash_decode_seq_sharded
+        from repro.models.attention import decode_attention
+        mesh = jax.make_mesh((1, 8), ("data", "model"))
+        B, S, H, KV, hd = 2, 64, 4, 2, 16
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (B, 1, H, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+        pos = jnp.int32(37)
+        ref = decode_attention(q, k, v, pos)
+        with jax.set_mesh(mesh):
+            out = flash_decode_seq_sharded(q, k, v, pos, mesh, axis="model")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-3)
+        print("flash-decode ok")
+    """)
+
+
+def test_train_step_shards_on_multi_device_mesh():
+    """Reduced arch train step lowers, compiles AND runs on a 4x2 mesh with
+    the production sharding rules; loss finite; grads all-reduced."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.dist import param_specs, batch_spec, index_specs
+        from repro.launch.steps import make_train_step
+        from repro.models import init_params, heads
+        from repro.optim import adamw
+        cfg = get_config("granite-moe-1b-a400m").reduced()
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        key = jax.random.PRNGKey(0)
+        params = init_params(cfg, key)
+        opt = adamw(1e-3)
+        opt_state = opt.init(params)
+        index = heads.init_head_state(cfg, params, key)
+        specs = param_specs(cfg, params, tp=2)
+        with jax.set_mesh(mesh):
+            p_sh = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                params, specs)
+            toks = jax.random.randint(key, (8, 16), 0, cfg.vocab_size)
+            batch = {"tokens": jax.device_put(toks, NamedSharding(mesh, P("data"))),
+                     "labels": jax.device_put(jnp.roll(toks, -1, 1),
+                                              NamedSharding(mesh, P("data")))}
+            step = jax.jit(make_train_step(cfg, opt))
+            new_p, new_o, metrics = step(p_sh, opt_state, index, batch,
+                                         jax.random.PRNGKey(1))
+            assert np.isfinite(float(metrics["loss"]))
+        print("sharded train step ok, loss", float(metrics["loss"]))
+    """)
+
+
+def test_moe_sharded_matches_local_multi_device():
+    """shard_map MoE dispatch (§Perf iter 2/3) == the local vmap path."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models import moe as moe_mod
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        key = jax.random.PRNGKey(0)
+        B, S, D, E, F, K = 8, 16, 32, 4, 64, 2
+        p = moe_mod.moe_init(key, D, F, E, shared_d_ff=48)
+        x = 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (B, S, D))
+        # local reference: vmap over batch (capacity per sequence differs from
+        # per-shard capacity, so compare with ample capacity_factor)
+        y_ref = jax.vmap(lambda hb: moe_mod.apply_moe(
+            p, hb, top_k=K, capacity_factor=8.0)[0])(x)
+        moe_mod.set_moe_mesh(mesh, ("data",), "model")
+        with jax.set_mesh(mesh):
+            y_sh, aux = jax.jit(lambda x: moe_mod.apply_moe_sharded(
+                p, x, top_k=K, capacity_factor=8.0))(x)
+        moe_mod.set_moe_mesh(None)
+        np.testing.assert_allclose(np.asarray(y_sh, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   atol=2e-2, rtol=2e-2)
+        assert np.isfinite(float(aux))
+        print("moe sharded ok")
+    """)
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """A checkpoint saved on a 4x2 mesh restores onto 2x4 and 8x1 meshes
+    (elastic re-scale after failures) with identical values."""
+    _run(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import CheckpointManager
+        from repro.configs import get_config
+        from repro.dist import param_specs
+        from repro.models import init_params
+        cfg = get_config("smollm-135m").reduced()
+        key = jax.random.PRNGKey(0)
+        params = init_params(cfg, key)
+        mgr = CheckpointManager({str(tmp_path)!r})
+        mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+        specs_a = param_specs(cfg, params, tp=2)
+        with jax.set_mesh(mesh_a):
+            p_a = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, NamedSharding(mesh_a, s)),
+                params, specs_a)
+        mgr.save(1, p_a, metadata={{"mesh": [4, 2]}})
+        for shape in ((2, 4), (8, 1)):
+            mesh_b = jax.make_mesh(shape, ("data", "model"))
+            specs_b = param_specs(cfg, params, tp=shape[1])
+            sh_b = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh_b, s), specs_b)
+            with jax.set_mesh(mesh_b):
+                p_b = mgr.restore(1, params, shardings=sh_b)
+            for a, b in zip(jax.tree_util.tree_leaves(p_a),
+                            jax.tree_util.tree_leaves(p_b)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("elastic restore ok")
+    """)
+
+
+def test_compressed_psum_multi_device():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.dist.collectives import psum_bf16, psum_int8_ef
+        mesh = jax.make_mesh((8,), ("data",))
+        x = jnp.arange(8.0).reshape(8, 1) + 1.0
+
+        def body(x):
+            g = {"w": x}
+            s_bf16 = psum_bf16(g, "data")["w"]
+            s_int8, ef = psum_int8_ef(g, {"w": jnp.zeros_like(x)}, "data")
+            return s_bf16, s_int8["w"]
+
+        f = shard_map(body, mesh=mesh, in_specs=P("data"),
+                      out_specs=(P(None), P(None)))
+        a, b = f(x)
+        np.testing.assert_allclose(np.asarray(a)[0], 36.0, rtol=1e-2)
+        np.testing.assert_allclose(np.asarray(b)[0], 36.0, rtol=2e-2)
+        print("compressed psum ok")
+    """)

@@ -1,0 +1,101 @@
+"""Pallas kernel sweeps (interpret mode) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build
+from repro.core.midx import twostage_tables
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ops import attention_op
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.midx_probs.ops import proposal_tables
+from repro.kernels.sampled_ce.ops import sampled_ce_op
+from repro.kernels.sampled_ce.ref import sampled_ce_ref
+from repro.kernels.sampled_ce.sampled_ce import sampled_ce
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,dtype", [
+    (2, 256, 4, 2, 64, jnp.float32),
+    (1, 256, 4, 4, 32, jnp.float32),
+    (2, 384, 6, 3, 64, jnp.float32),
+    (1, 128, 2, 1, 128, jnp.bfloat16),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, s, h, kv, hd, dtype, causal, key):
+    q = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 3), (b, s, kv, hd), dtype)
+    o_k = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128,
+                          interpret=True)
+    o_r = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_grad(key):
+    q = jax.random.normal(key, (1, 128, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 32))
+    g1 = jax.grad(lambda q: attention_op(q, k, v, True, True).sum())(q)
+    g2 = jax.grad(lambda q: attention_ref(q, k, v, causal=True).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("kind", ["pq", "rq"])
+@pytest.mark.parametrize("t,d,k,dtype", [
+    (256, 64, 16, jnp.float32),
+    (300, 32, 8, jnp.float32),       # T not a multiple of block (padding path)
+    (128, 64, 32, jnp.bfloat16),
+])
+def test_midx_probs_sweep(kind, t, d, k, dtype, key):
+    emb = (jax.random.normal(key, (500, d)) * 0.5)
+    idx = build(jax.random.fold_in(key, 1), emb, kind=kind, k=k, iters=3)
+    z = jax.random.normal(jax.random.fold_in(key, 2), (t, d), dtype)
+    ref = twostage_tables(idx, z)
+    ker = proposal_tables(idx, z, use_kernel=True, block_t=128, interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    for name, a, b in zip(("s1", "s2", "lpsi", "lse"), ref, ker):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol,
+                                   rtol=tol, err_msg=f"{kind} {name}")
+
+
+@pytest.mark.parametrize("t,d,m,dtype", [
+    (256, 64, 256, jnp.float32),
+    (512, 32, 128, jnp.float32),
+    (128, 128, 256, jnp.bfloat16),
+])
+def test_sampled_ce_sweep(t, d, m, dtype, key):
+    v = 1000
+    h = (jax.random.normal(jax.random.fold_in(key, 1), (t, d)) * 0.3).astype(dtype)
+    table = (jax.random.normal(jax.random.fold_in(key, 2), (v, d)) * 0.3).astype(dtype)
+    pos_ids = jax.random.randint(jax.random.fold_in(key, 3), (t,), 0, v)
+    neg_ids = jax.random.randint(jax.random.fold_in(key, 4), (m,), 0, v)
+    log_q = jnp.full((m,), -np.log(v), jnp.float32)
+    pe, ne = table[pos_ids], table[neg_ids]
+    ref = sampled_ce_ref(h, pe, ne, log_q, neg_ids, pos_ids)
+    ker = sampled_ce(h, pe, ne, log_q, neg_ids, pos_ids,
+                     block_t=128, block_m=128, interpret=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), atol=tol,
+                               rtol=tol)
+
+
+def test_sampled_ce_grads(key):
+    t, d, m, v = 128, 32, 128, 500
+    h = jax.random.normal(key, (t, d)) * 0.3
+    table = jax.random.normal(jax.random.fold_in(key, 1), (v, d)) * 0.3
+    pos_ids = jax.random.randint(jax.random.fold_in(key, 2), (t,), 0, v)
+    neg_ids = jax.random.randint(jax.random.fold_in(key, 3), (m,), 0, v)
+    log_q = jnp.full((m,), -np.log(v), jnp.float32)
+    pe, ne = table[pos_ids], table[neg_ids]
+    g1 = jax.grad(lambda h, ne: sampled_ce_op(h, pe, ne, log_q, neg_ids,
+                                              pos_ids, True).mean(),
+                  argnums=(0, 1))(h, ne)
+    g2 = jax.grad(lambda h, ne: sampled_ce_ref(h, pe, ne, log_q, neg_ids,
+                                               pos_ids).mean(),
+                  argnums=(0, 1))(h, ne)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

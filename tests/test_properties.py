@@ -1,0 +1,105 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import build, midx, sampled_softmax_loss
+from repro.core.alias import build_alias
+from repro.core.midx import exact_decomposition
+
+SET = dict(max_examples=15, deadline=None,
+           suppress_health_check=[HealthCheck.too_slow])
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(20, 120),
+       d=st.sampled_from([8, 16, 32]), k=st.sampled_from([2, 4, 8]),
+       kind=st.sampled_from(["pq", "rq"]))
+@settings(**SET)
+def test_theorem1_holds_for_any_embeddings(seed, n, d, k, kind):
+    """P¹·P²·P³ == softmax for arbitrary class embeddings and codebooks."""
+    key = jax.random.PRNGKey(seed)
+    emb = jax.random.normal(key, (n, d))
+    idx = build(jax.random.fold_in(key, 1), emb, kind=kind, k=k, iters=2)
+    z = jax.random.normal(jax.random.fold_in(key, 2), (2, d))
+    dec = exact_decomposition(idx, z, emb)
+    joint = (idx.assign1 * k + idx.assign2)[None].repeat(2, 0)
+    lp = (dec.log_p1[:, idx.assign1]
+          + jnp.take_along_axis(dec.log_p2.reshape(2, -1), joint, -1)
+          + dec.log_p3)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(dec.log_softmax),
+                               atol=1e-3)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(20, 120),
+       kind=st.sampled_from(["pq", "rq"]))
+@settings(**SET)
+def test_proposal_is_distribution(seed, n, kind):
+    """Fast-MIDX proposal sums to 1 and respects the Eq.(6) closed form."""
+    key = jax.random.PRNGKey(seed)
+    emb = jax.random.normal(key, (n, 16))
+    idx = build(jax.random.fold_in(key, 1), emb, kind=kind, k=4, iters=2)
+    z = jax.random.normal(jax.random.fold_in(key, 2), (1, 16))
+    lq = midx.log_prob(idx, z, jnp.arange(n)[None])
+    total = float(jnp.sum(jnp.exp(lq)))
+    assert abs(total - 1.0) < 1e-3
+    ref = jax.nn.log_softmax(z @ emb.T - z @ idx.residuals.T, axis=-1)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(ref), atol=1e-3)
+
+
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 50))
+@settings(**SET)
+def test_sampled_loss_nonnegative_and_shift_invariant(seed, m):
+    key = jax.random.PRNGKey(seed)
+    pos = jax.random.normal(key, (4,)) * 3
+    neg = jax.random.normal(jax.random.fold_in(key, 1), (4, m)) * 3
+    lq = jax.nn.log_softmax(jax.random.normal(jax.random.fold_in(key, 2),
+                                              (4, m)), -1)
+    l0 = sampled_softmax_loss(pos, neg, lq)
+    assert bool(jnp.all(l0 >= -1e-4))
+    l1 = sampled_softmax_loss(pos - 2.5, neg - 2.5, lq)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 200))
+@settings(**SET)
+def test_alias_table_reconstructs_any_distribution(seed, n):
+    rng = np.random.default_rng(seed)
+    p = rng.random(n) + 1e-6
+    p /= p.sum()
+    t = build_alias(p)
+    prob = np.asarray(t.prob, np.float64)
+    alias = np.asarray(t.alias)
+    recon = prob / n
+    for j in range(n):
+        recon[alias[j]] += (1 - prob[j]) / n
+    np.testing.assert_allclose(recon, p, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_residual_norm_shrinks_with_codewords(seed):
+    """Distortion (hence the Thm-5 KL bound) decreases with K."""
+    key = jax.random.PRNGKey(seed)
+    emb = jax.random.normal(key, (200, 16))
+    e_small = build(jax.random.fold_in(key, 1), emb, kind="rq", k=2, iters=4)
+    e_big = build(jax.random.fold_in(key, 2), emb, kind="rq", k=32, iters=4)
+    d_small = float(jnp.mean(jnp.sum(e_small.residuals ** 2, -1)))
+    d_big = float(jnp.mean(jnp.sum(e_big.residuals ** 2, -1)))
+    assert d_big <= d_small * 1.05
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       bsz=st.integers(1, 3), s=st.sampled_from([8, 16]))
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_rq_beats_pq_distortion(seed, bsz, s):
+    """Residual quantization achieves <= PQ distortion (paper §6.2.3)."""
+    del bsz, s
+    key = jax.random.PRNGKey(seed)
+    emb = jax.random.normal(key, (300, 32))
+    pq = build(jax.random.fold_in(key, 1), emb, kind="pq", k=8, iters=6)
+    rq = build(jax.random.fold_in(key, 2), emb, kind="rq", k=8, iters=6)
+    d_pq = float(jnp.mean(jnp.sum(pq.residuals ** 2, -1)))
+    d_rq = float(jnp.mean(jnp.sum(rq.residuals ** 2, -1)))
+    assert d_rq <= d_pq * 1.15          # rq at least comparable, usually better

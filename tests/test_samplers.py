@@ -1,0 +1,108 @@
+"""Baseline samplers: interface contract, proposal correctness, KL ordering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_sampler, SAMPLER_NAMES
+from repro.core.alias import build_alias, sample_alias
+
+N, D, K = 300, 16, 8
+
+
+@pytest.fixture(scope="module")
+def emb():
+    # clustered embeddings: adaptive samplers have structure to exploit
+    key = jax.random.PRNGKey(0)
+    centers = jax.random.normal(key, (K, D)) * 2.0
+    cl = jax.random.randint(jax.random.PRNGKey(1), (N,), 0, K)
+    return centers[cl] + 0.1 * jax.random.normal(jax.random.PRNGKey(2), (N, D))
+
+
+@pytest.mark.parametrize("name", SAMPLER_NAMES)
+def test_sampler_contract(name, emb):
+    s = make_sampler(name, k=K)
+    freq = np.random.default_rng(0).random(N) + 0.1
+    st = s.init(jax.random.PRNGKey(3), emb, freq)
+    z = jax.random.normal(jax.random.PRNGKey(4), (5, D))
+    d = s.sample(st, jax.random.PRNGKey(5), z, 12)
+    assert d.ids.shape == (5, 12) and d.log_q.shape == (5, 12)
+    assert bool(jnp.all((d.ids >= 0) & (d.ids < N)))
+    assert bool(jnp.all(d.log_q <= 1e-5))
+    lp = s.log_prob(st, z, d.ids)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(d.log_q), atol=1e-4)
+    st2 = s.refresh(st, jax.random.PRNGKey(6), emb + 0.01)
+    d2 = s.sample(st2, jax.random.PRNGKey(7), z, 12)
+    assert d2.ids.shape == (5, 12)
+
+
+@pytest.mark.parametrize("name", ["uniform", "unigram", "full", "sphere",
+                                  "rff", "lsh", "midx-rq"])
+def test_log_prob_normalized(name, emb):
+    """Σ_i q(i|z) == 1 for every sampler's proposal."""
+    s = make_sampler(name, k=K)
+    st = s.init(jax.random.PRNGKey(3), emb, np.ones(N))
+    z = jax.random.normal(jax.random.PRNGKey(4), (3, D))
+    ids = jnp.arange(N)[None].repeat(3, 0)
+    total = jnp.sum(jnp.exp(s.log_prob(st, z, ids)), axis=-1)
+    np.testing.assert_allclose(np.asarray(total), 1.0, atol=1e-3)
+
+
+def test_kl_ordering_table2(emb):
+    """Paper Table 2: KL(midx-rq) < KL(midx-pq) << KL(uniform/unigram) on
+    clustered class embeddings."""
+    z = jax.random.normal(jax.random.PRNGKey(8), (8, D))
+    log_p = jax.nn.log_softmax(z @ emb.T, axis=-1)
+    ids = jnp.arange(N)[None].repeat(8, 0)
+    kls = {}
+    for name in ("uniform", "unigram", "midx-pq", "midx-rq"):
+        s = make_sampler(name, k=K)
+        st = s.init(jax.random.PRNGKey(9), emb, np.ones(N))
+        lq = s.log_prob(st, z, ids)
+        kls[name] = float(jnp.mean(jnp.sum(jnp.exp(lq) * (lq - log_p), -1)))
+    assert kls["midx-rq"] < kls["uniform"]
+    assert kls["midx-pq"] < kls["uniform"]
+    assert kls["midx-rq"] < kls["midx-pq"] + 0.5     # rq at least as good
+    assert all(v >= -1e-4 for v in kls.values())     # KL non-negativity
+
+
+def test_theorem5_kl_bound(emb):
+    """KL(Q_midx || P) <= 2 ||õ||_inf (Theorem 5), numerically."""
+    from repro.core import build, midx
+    z = jax.random.normal(jax.random.PRNGKey(10), (4, D))
+    for kind in ("pq", "rq"):
+        idx = build(jax.random.PRNGKey(11), emb, kind=kind, k=K, iters=5)
+        log_p = jax.nn.log_softmax(z @ emb.T, axis=-1)
+        ids = jnp.arange(N)[None].repeat(4, 0)
+        lq = midx.log_prob(idx, z, ids)
+        kl = jnp.sum(jnp.exp(lq) * (lq - log_p), axis=-1)
+        bound = 2 * jnp.max(jnp.abs(z @ idx.residuals.T), axis=-1)
+        assert bool(jnp.all(kl <= bound + 1e-4))
+
+
+def test_midx_exact_equals_softmax(emb):
+    s = make_sampler("midx-exact-rq", k=K)
+    st = s.init(jax.random.PRNGKey(3), emb)
+    z = jax.random.normal(jax.random.PRNGKey(4), (2, D))
+    ids = jnp.arange(N)[None].repeat(2, 0)
+    lq = s.log_prob(st, z, ids)
+    ref = jax.nn.log_softmax(z @ emb.T, axis=-1)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(ref), atol=1e-5)
+
+
+def test_alias_table_exact():
+    """Vose alias invariant: reconstructed probabilities == input exactly."""
+    rng = np.random.default_rng(0)
+    p = rng.random(64) + 1e-3
+    p /= p.sum()
+    t = build_alias(p)
+    prob = np.asarray(t.prob, np.float64)
+    alias = np.asarray(t.alias)
+    recon = prob / 64
+    for j in range(64):
+        recon[alias[j]] += (1 - prob[j]) / 64
+    np.testing.assert_allclose(recon, p, atol=1e-6)
+    # empirical check
+    s = sample_alias(jax.random.PRNGKey(0), t, (200000,))
+    freq = np.bincount(np.asarray(s), minlength=64) / 200000
+    assert 0.5 * np.abs(freq - p).sum() < 0.02

@@ -1,0 +1,71 @@
+"""SSD-scan Pallas kernel sweeps vs the jnp oracle and mamba2's own scan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan.ops import ssd_scan_batched_ref, ssd_scan_op
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+def _inputs(key, bt, s, h, p, n, dtype=jnp.float32):
+    x = (jax.random.normal(key, (bt, s, h, p)) * 0.5).astype(dtype)
+    bm = (jax.random.normal(jax.random.fold_in(key, 1), (bt, s, n)) * 0.5).astype(dtype)
+    cm = (jax.random.normal(jax.random.fold_in(key, 2), (bt, s, n)) * 0.5).astype(dtype)
+    adt = -jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3),
+                                             (bt, s, h))).astype(jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 4),
+                                           (bt, s, h))).astype(jnp.float32)
+    return x, bm, cm, adt, dt
+
+
+@pytest.mark.parametrize("bt,s,h,p,n,q,dtype", [
+    (2, 64, 3, 16, 8, 16, jnp.float32),
+    (1, 128, 2, 32, 16, 32, jnp.float32),
+    (1, 64, 4, 8, 8, 8, jnp.bfloat16),
+])
+def test_ssd_kernel_sweep(bt, s, h, p, n, q, dtype, key):
+    x, bm, cm, adt, dt = _inputs(key, bt, s, h, p, n, dtype)
+    y_k = ssd_scan(x, bm, cm, adt, dt, chunk=q, interpret=True)
+    y_r = ssd_scan_batched_ref(x, bm, cm, adt, dt, chunk=q)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), atol=tol, rtol=tol)
+
+
+def test_ssd_kernel_matches_mamba_block_core(key):
+    """Oracle agrees with the mamba2 block's internal chunked scan."""
+    from repro.models import mamba2 as mm
+    d_model, d_state, head_dim, expand = 32, 8, 16, 2
+    p = mm.mamba2_init(key, d_model, d_state=d_state, head_dim=head_dim,
+                       expand=expand, conv_width=4)
+    x = 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (2, 32, d_model))
+    y_block = mm.apply_mamba2(p, x, d_state=d_state, head_dim=head_dim,
+                              expand=expand, chunk=8)
+    # reproduce the block's pre-scan tensors, run the kernel oracle for the
+    # SSD core, and re-apply the block's post-processing
+    d_inner = expand * d_model
+    nheads = d_inner // head_dim
+    z = x @ p["z_proj"]
+    xs = mm._causal_conv(x @ p["x_proj"], p["conv_x"], p["conv_x_b"])
+    bmat = mm._causal_conv(x @ p["b_proj"], p["conv_b"], p["conv_b_b"])
+    cmat = mm._causal_conv(x @ p["c_proj"], p["conv_c"], p["conv_c_b"])
+    dt = jax.nn.softplus(x @ p["dt_proj"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(2, 32, nheads, head_dim)
+    y_core = ssd_scan_batched_ref(xh, bmat, cmat, a[None, None] * dt, dt,
+                                  chunk=8)
+    y = y_core + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(2, 32, d_inner)
+    y = mm._gated_norm(y, z, p["norm_scale"])
+    y = y @ p["out_proj"]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_block), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_ssd_kernel_grads(key):
+    x, bm, cm, adt, dt = _inputs(key, 1, 32, 2, 8, 8)
+    g1 = jax.grad(lambda x: ssd_scan_op(x, bm, cm, adt, dt, 8, True).sum())(x)
+    g2 = jax.grad(lambda x: ssd_scan_batched_ref(x, bm, cm, adt, dt,
+                                                 chunk=8).sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
