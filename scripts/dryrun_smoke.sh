@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Fast coherence check for the distribution plan (DESIGN §4/§7): compile the
+# paper's own LM through the production sharding on one small shape. Runs in
+# well under a minute on CPU; the full matrix is `--all --mesh both`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.dryrun --arch paper-lm --shape train_4k --mesh single "$@"

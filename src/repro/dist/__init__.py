@@ -1,0 +1,22 @@
+"""repro.dist — the distribution subsystem (DESIGN §4).
+
+Three layers:
+  sharding     PartitionSpec factories for params / optimizer state / batches
+               / MIDX index state / decode caches, covering every config.
+  collectives  compressed gradient all-reduce transports (bf16, int8+EF)
+               for the shard_map data-parallel train step.
+  decode       sequence-sharded flash decode attention with LSE merge.
+
+Consumed by launch.steps / launch.train / launch.dryrun and by
+optim.opt_state_specs (ZeRO-1).
+"""
+from repro.dist.sharding import (param_specs, zero1_specs, batch_spec,
+                                 index_specs, decode_cache_specs)
+from repro.dist.collectives import psum_bf16, psum_int8_ef
+from repro.dist.decode import flash_decode_seq_sharded
+
+__all__ = [
+    "param_specs", "zero1_specs", "batch_spec", "index_specs",
+    "decode_cache_specs", "psum_bf16", "psum_int8_ef",
+    "flash_decode_seq_sharded",
+]

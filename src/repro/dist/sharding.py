@@ -1,0 +1,211 @@
+"""PartitionSpec factories for every pytree the launch layer shards (DESIGN §4).
+
+The rules are name-based over the param-tree paths produced by
+`models.init_params`, so one function covers all architecture families
+(dense / MoE / SSM / hybrid / VLM / enc-dec).  Leaves inside the stacked
+`blocks` pytree carry a leading layer dimension, so every rule indexes its
+sharded dimension *from the end* of the shape.
+
+Safety invariant: a dimension is only ever sharded when its size divides the
+axis degree — otherwise that dimension falls back to replicated.  This is what
+lets the same rules serve tp ∈ {1, 2, 16} and every config, including the
+`reduced()` CPU variants.
+
+Tensor-parallel layout (Megatron-style, per block):
+  column-parallel (shard out-features): wq/wk/wv, mlp gate/up, moe w_gate/w_up,
+      mamba z/x/dt projections (d_inner shards; B/C stay replicated — they are
+      head-shared and tiny, see models/mamba2.py)
+  row-parallel (shard in-features):     wo, mlp down, moe w_down, mamba out_proj
+  vocab-parallel:                       embed / head tables shard the class dim
+  replicated:                           norms, router, gates, biases, codebooks
+
+The MIDX index state is always replicated (`index_specs`): the fast-sampler
+state is O(K² + N) ints — small by construction because `index.build` drops
+the [N, D] residual table (core/index.py's replication contract, DESIGN §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# leaf name -> which dim (from the end) shards over the model axis
+_COL_PARALLEL = {
+    "wq": -1, "wk": -1, "wv": -1,              # attention projections
+    "gate": -1, "up": -1,                      # dense / shared-expert MLP
+    "w_gate": -1, "w_up": -1,                  # MoE expert stacks [E, D, F]
+    "z_proj": -1, "x_proj": -1, "dt_proj": -1,  # mamba2 d_inner projections
+    "conv_x": -1, "conv_x_b": -1,              # depthwise conv over d_inner
+    "norm_scale": -1,                          # mamba2 gated-norm scale
+}
+_ROW_PARALLEL = {
+    "wo": -2, "down": -2, "w_down": -2, "out_proj": -2,
+}
+_VOCAB_PARALLEL = {
+    "embed": -2, "head": -2,                   # [Vpad, D] class tables
+}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for entry in path:
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            out.append(key)
+    return out
+
+
+def _shard_dim(leaf, dim_from_end: int, degree: int, axis) -> P:
+    """Full-rank spec sharding one dim over `axis`, or replicated if the dim
+    does not divide `degree`."""
+    nd = leaf.ndim
+    d = nd + dim_from_end
+    entries = [None] * nd
+    if 0 <= d < nd and leaf.shape[d] > 0 and leaf.shape[d] % degree == 0:
+        entries[d] = axis
+    return P(*entries)
+
+
+def param_specs(cfg, params_abs, *, tp: int, model_axis: str = "model"):
+    """Tensor-parallel PartitionSpecs for a (possibly abstract) param tree.
+
+    cfg is accepted for signature stability (family-specific overrides hang
+    off it) but the rules are purely structural today.
+    """
+    del cfg  # rules are name-based; every family is covered by the tables
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if name in _COL_PARALLEL:
+            return _shard_dim(leaf, _COL_PARALLEL[name], tp, model_axis)
+        if name in _ROW_PARALLEL:
+            return _shard_dim(leaf, _ROW_PARALLEL[name], tp, model_axis)
+        if name in _VOCAB_PARALLEL and len(names) == 1:
+            # top-level class tables only — "head"/"gate" nested deeper are
+            # different params
+            return _shard_dim(leaf, _VOCAB_PARALLEL[name], tp, model_axis)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, params_abs)
+
+
+def zero1_specs(specs, params_abs, *, dp: int,
+                data_axes: Sequence[str] = ("data",),
+                min_size: int = 1 << 16):
+    """Extend big tables over the data axis — ZeRO-1 optimizer-state sharding.
+
+    Applied to the AdamW mu/nu moments (optim.opt_state_specs): each moment
+    leaf with ≥ `min_size` elements gains a data-axis sharding on its first
+    still-replicated divisible dimension, cutting optimizer-state memory by
+    dp× for the tables that dominate it (class embeddings, attention / FFN
+    weights).  Small leaves (norm scales, gates) stay replicated — resharding
+    them costs more than it saves.
+    """
+    data_axes = tuple(data_axes)
+    entry = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def one(spec, leaf):
+        if leaf.size < min_size:
+            return spec
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        for d in range(leaf.ndim):
+            if entries[d] is None and leaf.shape[d] > 0 \
+                    and leaf.shape[d] % dp == 0:
+                entries[d] = entry
+                return P(*entries)
+        return spec
+
+    return jax.tree_util.tree_map(one, specs, params_abs)
+
+
+def batch_spec(multi_pod: bool, *, global_batch: int, dp: int) -> P:
+    """Data-parallel spec for the leading batch dimension of every input.
+
+    Falls back to replicated when the batch does not divide the data degree
+    (e.g. long_500k decodes batch 1 on a 512-chip mesh)."""
+    axes = ("pod", "data") if multi_pod else ("data",)
+    if global_batch % dp:
+        return P()
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def index_specs(index_abs):
+    """MIDX index state is replicated on every device (DESIGN §4).
+
+    The adaptive sampler only pays off if proposal state stays cheap relative
+    to the sharded O(N·D) class table; `index.build(keep_residuals=False)`
+    keeps it at O(K² + N) ints, small enough to replicate, so sampling does
+    zero collectives inside the train step."""
+    return jax.tree_util.tree_map(lambda _: P(), index_abs)
+
+
+def decode_cache_specs(cfg, cache_abs, *, tp: int, multi_pod: bool,
+                       global_batch: int, dp_degree: int,
+                       model_axis: str = "model"):
+    """Shardings for the decode state pytree (models/decode.py layout).
+
+    KV caches [L, B, Smax, KV, hd] shard batch over data and, over the model
+    axis, KV heads when they divide tp — otherwise the *sequence* dimension
+    (the layout `dist.decode.flash_decode_seq_sharded` consumes; DESIGN §5).
+    SSM states shard batch over data and d_inner-derived dims over model.
+    """
+    del cfg
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    dentry = data_axes if len(data_axes) > 1 else data_axes[0]
+    batch_ok = global_batch % dp_degree == 0
+
+    def kv_like(leaf):
+        # [L|A, B, S, KV, hd]
+        entries = [None] * leaf.ndim
+        if batch_ok and leaf.shape[1] == global_batch:
+            entries[1] = dentry
+        if leaf.shape[3] % tp == 0:
+            entries[3] = model_axis
+        elif leaf.shape[2] % tp == 0:
+            entries[2] = model_axis
+        return P(*entries)
+
+    def batch_and_last(leaf):
+        # [L, B, ..., C]: batch over data, trailing channel over model
+        entries = [None] * leaf.ndim
+        if batch_ok and leaf.ndim > 1 and leaf.shape[1] == global_batch:
+            entries[1] = dentry
+        if leaf.shape[-1] % tp == 0:
+            entries[-1] = model_axis
+        return P(*entries)
+
+    def batch_only(leaf):
+        entries = [None] * leaf.ndim
+        if batch_ok and leaf.ndim > 1 and leaf.shape[1] == global_batch:
+            entries[1] = dentry
+        return P(*entries)
+
+    def ssm_state(leaf):
+        # [L, B, H, N, P]: batch over data, heads over model
+        entries = [None] * leaf.ndim
+        if batch_ok and leaf.shape[1] == global_batch:
+            entries[1] = dentry
+        if leaf.shape[2] % tp == 0:
+            entries[2] = model_axis
+        return P(*entries)
+
+    rules = {
+        "k": kv_like, "v": kv_like,
+        "shared_k": kv_like, "shared_v": kv_like,
+        "cross_k": kv_like, "cross_v": kv_like,
+        # conv_x carries d_inner (model-sharded); conv_b/c carry the tiny
+        # B/C channels which stay replicated like their projections
+        "conv_x": batch_and_last, "conv_b": batch_only, "conv_c": batch_only,
+        "ssm": ssm_state,
+    }
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if name in rules:
+            return rules[name](leaf)
+        return P(*([None] * leaf.ndim))    # slot_pos and friends: replicated
+
+    return jax.tree_util.tree_map_with_path(one, cache_abs)

@@ -24,12 +24,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, get_config
 from repro.configs.base import LM_SHAPES, ShapeConfig, shape_by_name
-from repro.dist import (param_specs, zero1_specs, batch_spec, index_specs,
+from repro.dist import (param_specs, batch_spec, index_specs,
                         decode_cache_specs)
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_production_mesh, mesh_dp_tp
-from repro.optim import adamw
-from repro.optim.optimizers import OptState
+from repro.optim import adamw, opt_state_specs
 
 # pure full-attention archs skip long_500k (quadratic @ 500k — DESIGN §5)
 LONG_OK_FAMILIES = ("ssm", "hybrid")
@@ -194,11 +193,9 @@ def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
         if shape.kind == "train":
             opt = adamw(1e-4)
             opt_abs = jax.eval_shape(opt.init, p_abs)
-            z_specs = zero1_specs(p_specs, p_abs, dp=dp,
-                                  data_axes=("pod", "data") if multi_pod
-                                  else ("data",))
-            opt_specs = OptState(P(), z_specs,
-                                 z_specs if opt_abs.nu is not None else None)
+            opt_specs = opt_state_specs(p_specs, p_abs, opt_abs, dp=dp,
+                                        data_axes=("pod", "data") if multi_pod
+                                        else ("data",))
             opt_sh = jax.tree_util.tree_map(
                 lambda s: NamedSharding(mesh, s), opt_specs)
             idx_abs = steps_mod.abstract_index(cfg, p_abs)

@@ -26,7 +26,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.data import ZipfLM, make_lm_stream
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_debug_mesh
+from repro.launch.mesh import make_debug_mesh, mesh_dp_tp
 from repro.models import heads, init_params
 from repro.optim import adamw, cosine_schedule
 
@@ -64,12 +64,20 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
                corpus: Optional[np.ndarray] = None, lr: float = 3e-4,
                head_mode: Optional[str] = None, log_every: int = 20,
                seed: int = 0, mesh=None, total_steps: Optional[int] = None,
+               grad_transport: str = "fp32",
                on_metrics: Optional[Callable[[int, dict], None]] = None):
     """Single-process training loop (the multi-host launcher shards this).
 
     total_steps: the JOB's schedule horizon — must stay fixed across
     preemption/resume legs so the LR schedule (and therefore the resumed
     trajectory) is bit-identical to an uninterrupted run.
+
+    mesh / grad_transport: with a mesh (or a non-fp32 transport, which forces
+    a data-only debug mesh over all local devices) the loop runs
+    steps.make_sharded_train_step — explicit shard_map data parallelism with
+    the chosen gradient all-reduce transport (DESIGN §4).  The int8 error-
+    feedback carry is step-local state: it deliberately re-zeros on restart
+    rather than being checkpointed (it is a sub-quantum correction).
     """
     key = jax.random.PRNGKey(seed)
     k_init, k_index, k_loop = jax.random.split(key, 3)
@@ -88,8 +96,22 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
         corpus = gen.sample(max(512, batch_size * 4))
     stream = make_lm_stream(corpus, batch_size, seed=seed)
 
-    train_step = jax.jit(steps_mod.make_train_step(cfg, optimizer,
-                                                   head_mode=head_mode))
+    if mesh is None and grad_transport != "fp32":
+        mesh = make_debug_mesh(jax.device_count(), 1)
+    dp = 1
+    if mesh is not None:
+        dp, _ = mesh_dp_tp(mesh)
+        data_axes = tuple(a for a in mesh.axis_names if a != "model")
+        if batch_size % dp:
+            raise ValueError(f"--batch {batch_size} must be divisible by "
+                             f"the data-parallel degree {dp}")
+        train_step = jax.jit(steps_mod.make_sharded_train_step(
+            cfg, optimizer, mesh, data_axes=data_axes,
+            grad_transport=grad_transport, head_mode=head_mode))
+    else:
+        train_step = jax.jit(steps_mod.make_train_step(cfg, optimizer,
+                                                       head_mode=head_mode))
+    ef = steps_mod.init_grad_transport_state(params, grad_transport, dp)
     refresh = jax.jit(steps_mod.make_refresh_step(cfg))
 
     ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
@@ -108,8 +130,12 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         k_step = jax.random.fold_in(k_loop, step)
         t0 = time.time()
-        params, opt_state, metrics = train_step(params, opt_state, index,
-                                                batch, k_step)
+        if mesh is not None:
+            params, opt_state, metrics, ef = train_step(
+                params, opt_state, index, batch, k_step, ef)
+        else:
+            params, opt_state, metrics = train_step(params, opt_state, index,
+                                                    batch, k_step)
         loss = float(metrics["loss"])                  # sync point
         dt = time.time() - t0
         if watchdog.observe(dt):
@@ -146,13 +172,21 @@ def main():
     ap.add_argument("--head", default=None, choices=(None, "midx", "full"))
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--dp", type=int, default=0,
+                    help="data-parallel degree; >0 runs the shard_map step "
+                         "on a (dp, 1) debug mesh")
+    ap.add_argument("--grad-transport", default="fp32",
+                    choices=("fp32", "bf16", "int8_ef"),
+                    help="gradient all-reduce transport (DESIGN §4)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    mesh = make_debug_mesh(args.dp, 1) if args.dp > 0 else None
     train_loop(cfg, steps=args.steps, batch_size=args.batch, seq_len=args.seq,
-               ckpt_dir=args.ckpt, head_mode=args.head, lr=args.lr)
+               ckpt_dir=args.ckpt, head_mode=args.head, lr=args.lr,
+               mesh=mesh, grad_transport=args.grad_transport)
 
 
 if __name__ == "__main__":

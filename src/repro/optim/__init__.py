@@ -1,4 +1,4 @@
 from repro.optim.optimizers import (adamw, sgd, OptState, Optimizer,
-                                    clip_by_global_norm)
+                                    clip_by_global_norm, opt_state_specs)
 from repro.optim.schedule import cosine_schedule, linear_warmup
 from repro.optim.accumulate import accumulate_gradients

@@ -76,6 +76,24 @@ def adamw(lr: float | Callable[[jax.Array], jax.Array], *, b1: float = 0.9,
     return Optimizer(init, update)
 
 
+def opt_state_specs(param_specs, params_abs, opt_state_abs, *, dp: int,
+                    data_axes=("data",)) -> OptState:
+    """PartitionSpecs for an OptState: ZeRO-1 sharding of the moments.
+
+    The fp32 mu/nu moments inherit the parameter's tensor-parallel spec
+    *extended over the data axis* (dist.sharding.zero1_specs) — each
+    data-parallel rank owns a 1/dp slice of the optimizer state for the big
+    tables while the bf16 params stay fully replicated over data.  `step`
+    is a replicated scalar; sgd's missing nu passes through as None.
+    """
+    from repro.dist.sharding import zero1_specs  # local: optim has no hard
+    # dependency on the distribution layer for single-device use
+    from jax.sharding import PartitionSpec as P
+
+    z = zero1_specs(param_specs, params_abs, dp=dp, data_axes=data_axes)
+    return OptState(P(), z, z if opt_state_abs.nu is not None else None)
+
+
 def sgd(lr: float | Callable[[jax.Array], jax.Array], *,
         momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
     lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
