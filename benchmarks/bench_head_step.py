@@ -1,0 +1,87 @@
+"""head_step — fused vs unfused MIDX training head (DESIGN §3/§7).
+
+Times one full loss+grad step of `heads.loss_midx` (the training hot path)
+in both implementations, and derives the HBM traffic the fusion removes:
+
+  unfused: [T, M, D] negative-embedding gather + [T, M] corrected logits
+           + a per-step fp32 copy of the [V, D] class table.
+  fused:   flash-CE — none of those tensors exist in HBM (3K+1 floats per
+           query from the proposal kernel, loss/lse per token).
+
+On CPU the fused kernels run under the Pallas interpreter, so its wall
+clock here measures the *interpreter*, not the TPU path — relative timing
+is only meaningful on a TPU backend (the `backend=` tag in `derived` says
+which one produced the row). The hbm rows are backend-independent analytic
+bytes, reported for the bench shape and for the paper-scale shape
+(T=65536, M=1024, D=1024, V=131072) quoted in DESIGN §3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.configs.base import HeadConfig, ModelConfig
+from repro.models import heads, init_params
+
+
+def _cfg(fast: bool) -> ModelConfig:
+    return ModelConfig(
+        name="bench-head", family="dense", num_layers=1, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=2000 if fast else 8000,
+        head_dim=16, vocab_pad_multiple=16, remat=False,
+        head=HeadConfig(mode="midx", midx_k=16, num_negatives=32 if fast else 128,
+                        proposal="per_token", kmeans_iters=3))
+
+
+def _hbm_bytes(t: int, m: int, d: int, v: int) -> tuple[float, float]:
+    """(unfused, fused) per-step HBM bytes for the per-token head's
+    head-only tensors (fp32)."""
+    unfused = 4.0 * (t * m * d        # [T, M, D] negative gather
+                     + t * m          # [T, M] corrected logits
+                     + v * d)         # fp32 copy of the class table
+    fused = 4.0 * (t * 2)             # loss + lse; gather/logits stay in VMEM
+    return unfused, fused
+
+
+def run(fast: bool = True):
+    cfg = _cfg(fast)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    index = heads.init_head_state(cfg, params, jax.random.fold_in(key, 1))
+    b, s = (2, 64) if fast else (4, 256)
+    d, m, v = cfg.d_model, cfg.head.num_negatives, cfg.padded_vocab
+    t = b * s
+    h = jax.random.normal(jax.random.fold_in(key, 2), (b, s, d),
+                          jnp.float32) * 0.3
+    labels = jax.random.randint(jax.random.fold_in(key, 3), (b, s), 0,
+                                cfg.vocab_size)
+    skey = jax.random.fold_in(key, 4)
+    backend = jax.default_backend()
+    interpret = backend != "tpu"     # fused kernels: compiled on TPU only
+
+    def step(fused):
+        def loss(p, hh):
+            return heads.loss_midx(cfg, p, index, hh, labels, skey,
+                                   fused=fused, interpret=fused and interpret)
+        return jax.jit(lambda p, hh: jax.value_and_grad(loss)(p, hh))
+
+    rows = []
+    for name, fused in (("unfused", False), ("fused", True)):
+        fn = step(fused)
+        us = timeit(fn, params, h, repeats=3 if interpret and fused else 10)
+        tok_s = t / (us * 1e-6)
+        mode = ("pallas" if backend == "tpu" else
+                ("interpret" if fused else "xla"))
+        rows.append((f"head_step/{name}_per_token", us,
+                     f"tok_s={tok_s:.0f};backend={backend};impl={mode}"))
+
+    for tag, (tt, mm, dd, vv) in (
+            ("bench", (t, m, d, v)),
+            ("paper", (65536, 1024, 1024, 131072))):
+        ub, fb = _hbm_bytes(tt, mm, dd, vv)
+        rows.append((f"head_step/hbm_{tag}_unfused_mb", ub / 2**20,
+                     f"T={tt};M={mm};D={dd};V={vv}"))
+        rows.append((f"head_step/hbm_{tag}_fused_mb", fb / 2**20,
+                     f"saved_mb={(ub - fb) / 2**20:.1f}"))
+    return rows

@@ -2,18 +2,22 @@
 """Benchmark orchestrator — one module per paper table/figure (DESIGN §7).
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only lm_ppl,kl,...]
+                                          [--json BENCH_head.json]
 Fast mode (default) sizes every bench for CPU minutes; --full uses
-paper-scale settings where feasible.
+paper-scale settings where feasible. --json additionally writes the rows
+(plus backend/timing metadata) to a file — the perf-trajectory artifact CI
+archives per run.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
 
-from benchmarks import (bench_codewords, bench_grad_bias, bench_kl,
-                        bench_learnable, bench_lm_ppl, bench_recsys,
+from benchmarks import (bench_codewords, bench_grad_bias, bench_head_step,
+                        bench_kl, bench_learnable, bench_lm_ppl, bench_recsys,
                         bench_sample_size, bench_sampling_time, bench_xmc,
                         roofline)
 
@@ -27,6 +31,7 @@ ALL = {
     "sample_size": bench_sample_size,       # Fig 7
     "recsys": bench_recsys,                 # Table 7
     "xmc": bench_xmc,                       # Table 9
+    "head_step": bench_head_step,           # fused vs unfused MIDX head (§3)
     "roofline": roofline,                   # §Roofline (from dry-run JSONs)
 }
 
@@ -35,10 +40,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + metadata to PATH as JSON")
     args = ap.parse_args()
     names = list(ALL) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     failures = 0
+    records = []
+    t_start = time.time()
     for name in names:
         mod = ALL[name]
         t0 = time.time()
@@ -48,10 +57,25 @@ def main() -> None:
             print(f"{name},ERROR,{e!r}", flush=True)
             traceback.print_exc(file=sys.stderr)
             failures += 1
+            records.append({"bench": name, "name": name, "error": repr(e)})
             continue
         for row_name, value, derived in rows:
             print(f"{row_name},{value:.4f},{derived}", flush=True)
+            records.append({"bench": name, "name": row_name,
+                            "us_per_call": float(value), "derived": derived})
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if args.json:
+        import jax
+        payload = {
+            "backend": jax.default_backend(),
+            "mode": "full" if args.full else "fast",
+            "unix_time": t_start,
+            "wall_s": time.time() - t_start,
+            "rows": records,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {args.json} ({len(records)} rows)", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

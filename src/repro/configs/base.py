@@ -25,6 +25,11 @@ class HeadConfig:
     kmeans_iters: int = 8
     learnable_codebooks: bool = False
     mask_collisions: bool = True
+    # Route loss_midx through the fused Pallas head (kernel proposal tables
+    # + flash-CE; DESIGN §3). Takes effect on backends that can run the
+    # kernels (TPU, or interpret mode) — elsewhere kernels.dispatch falls
+    # back to the jnp path, so this default is safe for the CPU suite.
+    use_fused_head: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

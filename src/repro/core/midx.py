@@ -71,17 +71,30 @@ def log_prob(index: MultiIndex, z: jax.Array, ids: jax.Array) -> jax.Array:
 # fast MIDX — per-token
 # ---------------------------------------------------------------------------
 
-def sample(index: MultiIndex, key: jax.Array, z: jax.Array, m: int) -> Draw:
-    """Per-token fast MIDX. z: [..., D] -> ids/log_q: [..., m]."""
+def sample(index: MultiIndex, key: jax.Array, z: jax.Array, m: int, *,
+           tables_fn=None) -> Draw:
+    """Per-token fast MIDX. z: [..., D] -> ids/log_q: [..., m].
+
+    `tables_fn(index, z) -> (s1, s2, log_psi, lse)` optionally replaces the
+    jnp score computation (e.g. the fused midx_probs Pallas kernel via
+    `kernels.dispatch.midx_tables_fn`); the K×K joint tile is then rebuilt
+    from s1/s2 on the fly — same draws, no second pass over z.
+    """
     k_pair, k_member = jax.random.split(key)
-    j, s1, s2 = joint_logits(index, z)
     kk = index.num_codewords
-    flat = j.reshape(*j.shape[:-2], kk * kk)                    # [..., K²]
+    if tables_fn is None:
+        j, s1, s2 = joint_logits(index, z)
+        flat = j.reshape(*j.shape[:-2], kk * kk)                # [..., K²]
+        lse = jax.nn.logsumexp(flat, axis=-1, keepdims=True)
+    else:
+        s1, s2, _, lse = tables_fn(index, z)
+        j = s1[..., :, None] + s2[..., None, :] + index.log_counts
+        flat = j.reshape(*j.shape[:-2], kk * kk)
+        lse = lse[..., None]
     # m independent draws per row: broadcast logits over a new sample dim.
     cluster = jax.random.categorical(k_pair, flat[..., None, :], axis=-1,
                                      shape=(*flat.shape[:-1], m))
     ids = _member_uniform(index, k_member, cluster)
-    lse = jax.nn.logsumexp(flat, axis=-1, keepdims=True)
     # log q = J[c] − log|Ω(c)| − lse = s1[k1]+s2[k2] − lse
     log_q = (jnp.take_along_axis(flat, cluster, axis=-1)
              - index.log_counts.reshape(-1)[cluster] - lse)
@@ -106,13 +119,18 @@ def twostage_tables(index: MultiIndex, z: jax.Array):
 
 
 def sample_twostage(index: MultiIndex, key: jax.Array, z: jax.Array,
-                    m: int) -> Draw:
+                    m: int, *, tables_fn=None) -> Draw:
     """Per-token fast MIDX via the paper's sequential two stages, vectorized:
     k1 ~ Cat(s1+logψ), then k2 ~ Cat(s2+log|Ω(k1,:)|), then uniform member.
     Identical distribution to `sample` (chain rule) but O(K) per draw instead
-    of a K² table per token."""
+    of a K² table per token.
+
+    `tables_fn(index, z) -> (s1, s2, log_psi, lse)` optionally replaces
+    `twostage_tables` — this is the hook the fused head uses to run the
+    one-pass midx_probs Pallas kernel (`kernels.dispatch.midx_tables_fn`)
+    instead of the jnp oracle. core/ stays kernel-free."""
     k1_key, k2_key, k_member = jax.random.split(key, 3)
-    s1, s2, log_psi, lse = twostage_tables(index, z)
+    s1, s2, log_psi, lse = (tables_fn or twostage_tables)(index, z)
     l1 = (s1 + log_psi)[..., None, :]                          # [..., 1, K]
     k1 = jax.random.categorical(k1_key, l1, axis=-1,
                                 shape=(*s1.shape[:-1], m))     # [..., m]

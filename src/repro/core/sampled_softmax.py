@@ -7,13 +7,21 @@ Given positive logit o_pos and M negatives s_j ~ Q with logits o_j:
 Self-normalized importance sampling: unbiased as M → ∞, gradient bias bounded
 by Theorems 6–9 in terms of d₂(P‖Q).
 
-Accidental hits (a negative draw equal to the positive) are masked to −inf by
-default, matching the common practice and Eq. (1)'s y_{s_i}=0 guard.
+Accidental hits (a negative draw equal to the positive) are masked to NEG_INF
+by default, matching the common practice and Eq. (1)'s y_{s_i}=0 guard.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+# Canonical collision-mask value, shared by the jnp losses here and every
+# Pallas kernel (kernels/sampled_ce). A large-but-finite sentinel instead of
+# -inf: exp(NEG_INF - lse) is exactly 0.0 in fp32 (identical loss), but the
+# online-logsumexp recurrences and their VJPs never see inf - inf = nan.
+# Masked-ness is tested as `x <= NEG_INF_THRESHOLD`, never `x == NEG_INF`.
+NEG_INF = -1e30
+NEG_INF_THRESHOLD = 0.5 * NEG_INF
 
 
 def corrected_logits(neg_logits: jax.Array, log_q: jax.Array, m: int) -> jax.Array:
@@ -36,7 +44,7 @@ def sampled_softmax_loss(pos_logit: jax.Array, neg_logits: jax.Array,
                             log_q.astype(jnp.float32), m)
     if mask_collisions and neg_ids is not None and pos_ids is not None:
         hit = neg_ids == pos_ids[..., None]
-        corr = jnp.where(hit, -jnp.inf, corr)
+        corr = jnp.where(hit, NEG_INF, corr)
     pos = pos_logit.astype(jnp.float32)[..., None]
     all_logits = jnp.concatenate([pos, corr], axis=-1)
     return jax.nn.logsumexp(all_logits, axis=-1) - pos[..., 0]

@@ -3,3 +3,5 @@
 # ops.py (jit'd wrapper + custom-vjp autodiff) and ref.py (pure-jnp oracle).
 # Validated with interpret=True on CPU; TPU is the target — the multi-pod
 # dry-run compiles the XLA reference paths.
+# dispatch.py is the single kernel-or-oracle decision point (backend-gated,
+# env-overridable) the fused MIDX head and launch drivers consult.

@@ -1,0 +1,87 @@
+"""Backend dispatch for the Pallas kernels (DESIGN §3).
+
+One place answers "kernel or jnp oracle?" for every fused hot path, so the
+decision is uniform across heads/steps/benchmarks:
+
+  - TPU backend        -> compiled Pallas kernels (the production path).
+  - anything else      -> jnp oracle fallback (what the CPU dry-run and the
+                          tier-1 suite compile), unless interpret mode is
+                          forced, in which case the *kernel dataflow* runs
+                          under the Pallas interpreter (parity tests, and
+                          compile-only dry-runs of the fused graph).
+
+Env overrides (read at trace time, for experiments — not config):
+  REPRO_FUSED_HEAD=0|1      force the fused head off/on everywhere.
+  REPRO_PALLAS_INTERPRET=1  run kernels interpreted on non-TPU backends.
+
+`core/` stays kernel-free: the samplers take a `tables_fn` hook, and this
+module is where models/launch obtain one.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Optional
+
+import jax
+
+from repro.core.index import MultiIndex
+
+
+def pallas_supported() -> bool:
+    """Compiled (non-interpret) Pallas requires a TPU backend."""
+    return jax.default_backend() == "tpu"
+
+
+def _env_flag(name: str) -> Optional[bool]:
+    v = os.environ.get(name, "").strip().lower()
+    if not v:
+        return None
+    return v not in ("0", "false", "no", "off")
+
+
+def interpret_default() -> bool:
+    return bool(_env_flag("REPRO_PALLAS_INTERPRET"))
+
+
+def fused_head_active(head_cfg, *, fused: Optional[bool] = None,
+                      interpret: bool = False) -> bool:
+    """Should `loss_midx` take the fused kernel path?
+
+    Explicit `fused` wins; else REPRO_FUSED_HEAD; else
+    `head_cfg.use_fused_head` gated on a backend that can run the kernels
+    (TPU, or interpret mode). The fused kernels always mask collisions, so
+    `mask_collisions=False` configs stay on the jnp path.
+    """
+    if not head_cfg.mask_collisions:
+        return False
+    if fused is None:
+        fused = _env_flag("REPRO_FUSED_HEAD")
+    if fused is not None:
+        return fused
+    return head_cfg.use_fused_head and (pallas_supported() or interpret
+                                        or interpret_default())
+
+
+def midx_tables_fn(*, use_kernel: Optional[bool] = None,
+                   interpret: bool = False,
+                   block_t: int = 256) -> Optional[Callable]:
+    """A `tables_fn` hook for core.midx.sample / sample_twostage.
+
+    Returns None when the jnp oracle (`twostage_tables`) should be used —
+    the samplers treat None as "no hook". Otherwise returns a callable
+    (index, z) -> (s1, s2, log_psi, lse) backed by the midx_probs kernel
+    (differentiable; see kernels/midx_probs/ops.py).
+    """
+    from repro.kernels.midx_probs.ops import proposal_tables
+    interpret = interpret or interpret_default()
+    if use_kernel is None:
+        use_kernel = pallas_supported() or interpret
+
+    if not use_kernel:
+        return None
+
+    def tables_fn(index: MultiIndex, z: jax.Array):
+        return proposal_tables(index, z, use_kernel=True, block_t=block_t,
+                               interpret=interpret)
+
+    return tables_fn

@@ -2,8 +2,16 @@
 
 `use_kernel=False` (or non-TPU backends) falls back to the jnp oracle —
 the dry-run compiles the XLA path; TPU runs the fused kernel.
+
+The kernel path is differentiable (custom_vjp): `log Q` from these tables
+carries gradient back into the query z (and, with learnable codebooks, the
+codebooks), so the fused training head needs d(tables)/dz. The backward
+recomputes through the jnp oracle — three K-wide GEMMs, [T, K] transients
+only.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -21,10 +29,42 @@ def _pad_t(x, block_t):
     return x, t
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _tables_op(z2d, cb1, cb2, counts, split: bool, block_t: int,
+               interpret: bool):
+    """Kernel-backed tables with an oracle-recompute VJP.
+    z2d [T, D] -> (s1, s2, log_psi [T, K], lse [T, 1])."""
+    zp, t0 = _pad_t(z2d, block_t)
+    s1, s2, lpsi, lse = midx_probs(zp, cb1, cb2, counts, split=split,
+                                   block_t=block_t, interpret=interpret)
+    return s1[:t0], s2[:t0], lpsi[:t0], lse[:t0]
+
+
+def _tables_fwd(z2d, cb1, cb2, counts, split, block_t, interpret):
+    out = _tables_op(z2d, cb1, cb2, counts, split, block_t, interpret)
+    return out, (z2d, cb1, cb2, counts)
+
+
+def _tables_bwd(split, block_t, interpret, res, g):
+    z2d, cb1, cb2, counts = res
+
+    def oracle(z, c1, c2):
+        s1, s2, lpsi, lse = midx_probs_ref(z, c1, c2, counts, split=split)
+        return s1, s2, lpsi, lse[:, None]
+
+    _, vjp = jax.vjp(oracle, z2d, cb1, cb2)
+    dz, dc1, dc2 = vjp(g)
+    return dz, dc1, dc2, jnp.zeros_like(counts)
+
+
+_tables_op.defvjp(_tables_fwd, _tables_bwd)
+
+
 def proposal_tables(index: MultiIndex, z: jax.Array, *, use_kernel: bool = True,
                     block_t: int = 256, interpret: bool = False):
     """z [..., D] -> (s1, s2, log_psi [..., K], lse [...]). Kernel-fused on
-    TPU; identical semantics to repro.core.midx.twostage_tables."""
+    TPU; identical semantics to repro.core.midx.twostage_tables. Both paths
+    are differentiable w.r.t. z and the codebooks."""
     split = index.kind == "pq"
     lead = z.shape[:-1]
     z2d = z.reshape(-1, z.shape[-1])
@@ -35,11 +75,8 @@ def proposal_tables(index: MultiIndex, z: jax.Array, *, use_kernel: bool = True,
                                            split=split)
         lse = lse[:, None]
     else:
-        zp, t0 = _pad_t(z2d, block_t)
-        s1, s2, lpsi, lse = midx_probs(zp, index.codebook1, index.codebook2,
-                                       counts, split=split, block_t=block_t,
-                                       interpret=interpret)
-        s1, s2, lpsi, lse = (a[:t0] for a in (s1, s2, lpsi, lse))
+        s1, s2, lpsi, lse = _tables_op(z2d, index.codebook1, index.codebook2,
+                                       counts, split, block_t, interpret)
     k = s1.shape[-1]
     return (s1.reshape(*lead, k), s2.reshape(*lead, k),
             lpsi.reshape(*lead, k), lse.reshape(*lead))

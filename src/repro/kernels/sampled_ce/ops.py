@@ -1,8 +1,16 @@
-"""Jit'd wrapper with autodiff for the fused sampled-softmax CE.
+"""Jit'd wrappers with autodiff for the fused sampled-softmax CE kernels.
 
-Forward: Pallas flash-CE (no [T, M] logits in HBM).
-Backward: custom_vjp recompute with the jnp oracle — logits exist only
-transiently inside the fused backward computation.
+sampled_ce_op (shared negatives):
+  Forward: Pallas flash-CE (no [T, M] logits in HBM).
+  Backward: fused Pallas backward (sampled_ce.sampled_ce_bwd) — softmax
+  weights rebuilt block-wise from the saved lse; dh/dpe and dne/dlq each
+  accumulate in VMEM, [T, M] never reaches HBM in either direction.
+
+sampled_ce_pt_op (per-token negatives):
+  Forward: Pallas per-token flash-CE — the class table stays in its native
+  dtype, the [T, M, D] gather and [T, M] logits never exist in HBM.
+  Backward: the fused Pallas backward (per_token.sampled_ce_pt_bwd) — dh,
+  dlq, and the d-table scatter all happen in-kernel from the saved lse.
 """
 from __future__ import annotations
 
@@ -10,30 +18,63 @@ import functools
 
 import jax
 
-from repro.kernels.sampled_ce.ref import sampled_ce_ref
-from repro.kernels.sampled_ce.sampled_ce import sampled_ce
+from repro.kernels.sampled_ce.per_token import (sampled_ce_pt,
+                                                sampled_ce_pt_bwd)
+from repro.kernels.sampled_ce.sampled_ce import sampled_ce, sampled_ce_bwd
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
 def sampled_ce_op(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids,
                   interpret: bool = False):
-    return sampled_ce(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids,
-                      interpret=interpret)
+    loss, _ = sampled_ce(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids,
+                         interpret=interpret)
+    return loss
 
 
 def _fwd(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, interpret):
-    out = sampled_ce_op(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids,
-                        interpret)
-    return out, (hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids)
+    loss, lse = sampled_ce(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids,
+                           interpret=interpret)
+    return loss, (hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, lse)
 
 
 def _bwd(interpret, res, g):
-    hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids = res
-    _, vjp = jax.vjp(
-        lambda h, pe, ne, lq: sampled_ce_ref(h, pe, ne, lq, neg_ids, pos_ids),
-        hidden, pos_emb, neg_emb, log_q)
-    dh, dpe, dne, dlq = vjp(g)
-    return dh, dpe, dne, dlq, None, None
+    hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, lse = res
+    dh, dpe, dne, dlq = sampled_ce_bwd(g, hidden, pos_emb, neg_emb, log_q,
+                                       neg_ids, pos_ids, lse,
+                                       interpret=interpret)
+    return (dh.astype(hidden.dtype), dpe.astype(pos_emb.dtype),
+            dne.astype(neg_emb.dtype), dlq.astype(log_q.dtype), None, None)
 
 
 sampled_ce_op.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def sampled_ce_pt_op(hidden, table, log_q, neg_ids, pos_ids,
+                     interpret: bool = False, block_t: int = 128,
+                     chunk: int = 8):
+    """Per-token fused CE. hidden [T,D]; table [V,D] native dtype;
+    log_q/neg_ids [T,M]; pos_ids [T] -> loss [T] fp32."""
+    loss, _ = sampled_ce_pt(hidden, table, log_q, neg_ids, pos_ids,
+                            block_t=block_t, chunk=chunk, interpret=interpret)
+    return loss
+
+
+def _pt_fwd(hidden, table, log_q, neg_ids, pos_ids, interpret, block_t,
+            chunk):
+    loss, lse = sampled_ce_pt(hidden, table, log_q, neg_ids, pos_ids,
+                              block_t=block_t, chunk=chunk,
+                              interpret=interpret)
+    return loss, (hidden, table, log_q, neg_ids, pos_ids, lse)
+
+
+def _pt_bwd(interpret, block_t, chunk, res, g):
+    hidden, table, log_q, neg_ids, pos_ids, lse = res
+    dh, dtab, dlq = sampled_ce_pt_bwd(g, hidden, table, log_q, neg_ids,
+                                      pos_ids, lse, block_t=block_t,
+                                      chunk=chunk, interpret=interpret)
+    return (dh.astype(hidden.dtype), dtab.astype(table.dtype), dlq,
+            None, None)
+
+
+sampled_ce_pt_op.defvjp(_pt_fwd, _pt_bwd)

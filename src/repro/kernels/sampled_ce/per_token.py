@@ -1,0 +1,268 @@
+"""Pallas TPU kernels: per-token fused sampled-softmax CE ("flash-CE pt").
+
+The per-token MIDX proposal draws a *different* negative set per token
+(`neg_ids [T, M]`), so the unfused loss materializes a [T, M, D] negative
+embedding gather plus the [T, M] corrected-logit matrix in HBM, and casts
+the whole [V, D] class table to fp32 first. These kernels keep all of that
+on-chip:
+
+Forward — grid (nT,), everything per token block resident in VMEM:
+  for each token t:  DMA the positive row and M negative rows straight out
+  of the class table (kept in its NATIVE dtype in HBM/ANY, gathered in
+  chunks of `chunk` rows), compute chunk logits on the VPU, apply the
+  ln(M·q) correction and collision mask in-register, and fold into an
+  online logsumexp. Outputs loss [T] and lse [T] (the backward residual).
+  Neither the [T, M, D] gather nor the [T, M] logits ever exist in HBM.
+
+Backward — same gather loop, recompute-style (flash): softmax weights are
+  rebuilt from the saved lse, then
+    dh  [T, D]  accumulated in VMEM,
+    dlq [T, M]  written per chunk,
+    dtab [V, D] scatter-accumulated IN-KERNEL via read-modify-write row DMAs
+  into a zero-initialized fp32 buffer (input_output_aliased). TPU grids are
+  sequential, and each RMW is awaited before the next, so duplicate ids —
+  including positive/negative collisions across tokens — accumulate safely.
+
+The row gathers are random-access HBM reads — the intrinsic cost of a
+gather; the chunked DMA issue (start `chunk` copies, then wait) overlaps
+latency within a chunk. Collision masking uses the canonical
+`core.sampled_softmax.NEG_INF` and the same validity-guard convention as
+the shared-negative kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sampled_softmax import NEG_INF, NEG_INF_THRESHOLD
+from repro.kernels.sampled_ce.sampled_ce import _pad_dim
+
+
+def _gather_chunk(tab_ref, nid, t, base, rows, sem, chunk: int):
+    """Start+wait `chunk` row DMAs table[nid[t, base+j]] -> rows[j]."""
+    for j in range(chunk):
+        idx = nid[t, base + j]
+        pltpu.make_async_copy(tab_ref.at[idx], rows.at[j], sem.at[j]).start()
+    for j in range(chunk):
+        idx = nid[t, base + j]
+        pltpu.make_async_copy(tab_ref.at[idx], rows.at[j], sem.at[j]).wait()
+
+
+def _corrected(logits, lq_c, nid_c, pid, num_neg: int):
+    corr = logits - (jnp.log(float(num_neg)) + lq_c)
+    return jnp.where(nid_c == pid, NEG_INF, corr)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(h_ref, lq_ref, nid_ref, pid_ref, tab_ref, loss_ref, lse_ref,
+                rows, prow, sem, psem, *, num_neg: int, chunk: int):
+    h = h_ref[...].astype(jnp.float32)                   # [Tb, D]
+    lq = lq_ref[...]
+    nid = nid_ref[...]
+    n_chunks = lq.shape[1] // chunk
+
+    def token(t, _):
+        pid = pid_ref[t]
+        pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).start()
+        pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).wait()
+        h_t = h[t]                                       # [D]
+        pos_logit = jnp.sum(h_t * prow[0, :].astype(jnp.float32))
+
+        def chunk_body(c, carry):
+            m_acc, l_acc = carry
+            base = c * chunk
+            _gather_chunk(tab_ref, nid, t, base, rows, sem, chunk)
+            e = rows[...].astype(jnp.float32)            # [chunk, D]
+            logits = jnp.sum(e * h_t[None, :], axis=-1)  # [chunk]
+            lq_c = jax.lax.dynamic_slice(lq, (t, base), (1, chunk))[0]
+            nid_c = jax.lax.dynamic_slice(nid, (t, base), (1, chunk))[0]
+            corr = _corrected(logits, lq_c, nid_c, pid, num_neg)
+            valid = corr > NEG_INF_THRESHOLD
+            m_new = jnp.maximum(m_acc, jnp.max(corr))
+            contrib = jnp.where(valid, jnp.exp(corr - m_new), 0.0)
+            l_new = l_acc * jnp.exp(m_acc - m_new) + jnp.sum(contrib)
+            return m_new, l_new
+
+        m_f, l_f = jax.lax.fori_loop(
+            0, n_chunks, chunk_body,
+            (jnp.float32(NEG_INF), jnp.float32(0.0)))
+        m_fin = jnp.maximum(m_f, pos_logit)
+        l_fin = l_f * jnp.exp(m_f - m_fin) + jnp.exp(pos_logit - m_fin)
+        lse = jnp.log(jnp.maximum(l_fin, 1e-30)) + m_fin
+        loss_ref[t, 0] = lse - pos_logit
+        lse_ref[t, 0] = lse
+        return 0
+
+    jax.lax.fori_loop(0, h.shape[0], token, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "chunk", "interpret"))
+def sampled_ce_pt(hidden: jax.Array, table: jax.Array, log_q: jax.Array,
+                  neg_ids: jax.Array, pos_ids: jax.Array, *,
+                  block_t: int = 128, chunk: int = 8,
+                  interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """hidden [T,D] fp32; table [V,D] native dtype; log_q/neg_ids [T,M];
+    pos_ids [T] -> (loss [T], lse [T]) fp32. Arbitrary T and M (padded)."""
+    t, d = hidden.shape
+    m = neg_ids.shape[-1]
+    block_t = min(block_t, t)
+    chunk = min(chunk, m)
+    hidden = _pad_dim(hidden.astype(jnp.float32), block_t)
+    pos_ids = _pad_dim(pos_ids, block_t)                 # pad rows sliced off
+    log_q = _pad_dim(log_q.astype(jnp.float32), block_t)
+    log_q = _pad_dim(log_q, chunk, axis=1, fill=-NEG_INF)  # invalidated cols
+    neg_ids = _pad_dim(_pad_dim(neg_ids, block_t), chunk, axis=1)
+    tp, mp = hidden.shape[0], log_q.shape[1]
+    kernel = functools.partial(_fwd_kernel, num_neg=m, chunk=chunk)
+    loss, lse = pl.pallas_call(
+        kernel,
+        grid=(tp // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((tp, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((chunk, d), table.dtype),
+            pltpu.VMEM((1, d), table.dtype),
+            pltpu.SemaphoreType.DMA((chunk,)),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(hidden, log_q, neg_ids, pos_ids, table)
+    return loss[:t, 0], lse[:t, 0]
+
+
+# ---------------------------------------------------------------------------
+# fused backward: dh, dlq, and the d-table scatter, all in-kernel
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel(g_ref, h_ref, lq_ref, nid_ref, pid_ref, lse_ref, tab_ref,
+                dtab_in_ref, dh_ref, dlq_ref, dtab_ref,
+                rows, prow, arow, sem, psem, asem, *,
+                num_neg: int, chunk: int):
+    del dtab_in_ref  # aliased with dtab_ref; zeros provided by the wrapper
+    h = h_ref[...].astype(jnp.float32)                   # [Tb, D]
+    lq = lq_ref[...]
+    nid = nid_ref[...]
+    n_chunks = lq.shape[1] // chunk
+
+    def rmw_row(idx, delta):
+        """dtab[idx] += delta, awaited read-modify-write (sequential grid)."""
+        pltpu.make_async_copy(dtab_ref.at[idx], arow.at[0], asem).start()
+        pltpu.make_async_copy(dtab_ref.at[idx], arow.at[0], asem).wait()
+        arow[0, :] = arow[0, :] + delta
+        pltpu.make_async_copy(arow.at[0], dtab_ref.at[idx], asem).start()
+        pltpu.make_async_copy(arow.at[0], dtab_ref.at[idx], asem).wait()
+
+    def token(t, _):
+        g = g_ref[t, 0]
+        lse = lse_ref[t, 0]
+        pid = pid_ref[t]
+        pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).start()
+        pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).wait()
+        h_t = h[t]
+        pe = prow[0, :].astype(jnp.float32)
+        pos_logit = jnp.sum(h_t * pe)
+        p_pos = jnp.exp(pos_logit - lse)
+        coeff_pos = g * (p_pos - 1.0)                    # dloss/dpos_logit · g
+        rmw_row(pid, coeff_pos * h_t)
+
+        def chunk_body(c, dh_t):
+            base = c * chunk
+            _gather_chunk(tab_ref, nid, t, base, rows, sem, chunk)
+            e = rows[...].astype(jnp.float32)            # [chunk, D]
+            logits = jnp.sum(e * h_t[None, :], axis=-1)
+            lq_c = jax.lax.dynamic_slice(lq, (t, base), (1, chunk))[0]
+            nid_c = jax.lax.dynamic_slice(nid, (t, base), (1, chunk))[0]
+            corr = _corrected(logits, lq_c, nid_c, pid, num_neg)
+            w = jnp.where(corr > NEG_INF_THRESHOLD,
+                          jnp.exp(corr - lse), 0.0)      # softmax weights
+            dlq_ref[t, pl.ds(base, chunk)] = -g * w
+            dh_t = dh_t + g * jnp.sum(w[:, None] * e, axis=0)
+            for j in range(chunk):
+                rmw_row(nid[t, base + j], g * w[j] * h_t)
+            return dh_t
+
+        dh_t = jax.lax.fori_loop(0, n_chunks, chunk_body, coeff_pos * pe)
+        dh_ref[t, :] = dh_t
+        return 0
+
+    jax.lax.fori_loop(0, h.shape[0], token, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "chunk", "interpret"))
+def sampled_ce_pt_bwd(g: jax.Array, hidden: jax.Array, table: jax.Array,
+                      log_q: jax.Array, neg_ids: jax.Array,
+                      pos_ids: jax.Array, lse: jax.Array, *,
+                      block_t: int = 128, chunk: int = 8,
+                      interpret: bool = False):
+    """Fused backward. g/lse [T]; others as sampled_ce_pt.
+    -> (dh [T,D] fp32, dtab [V,D] fp32, dlq [T,M] fp32)."""
+    t, d = hidden.shape
+    v = table.shape[0]
+    m = neg_ids.shape[-1]
+    block_t = min(block_t, t)
+    chunk = min(chunk, m)
+    hidden = _pad_dim(hidden.astype(jnp.float32), block_t)
+    g2 = _pad_dim(g.astype(jnp.float32)[:, None], block_t)  # pad g with 0 —
+    lse2 = _pad_dim(lse[:, None], block_t)                  # rows contribute 0
+    pos_ids = _pad_dim(pos_ids, block_t)
+    log_q = _pad_dim(log_q.astype(jnp.float32), block_t)
+    log_q = _pad_dim(log_q, chunk, axis=1, fill=-NEG_INF)
+    neg_ids = _pad_dim(_pad_dim(neg_ids, block_t), chunk, axis=1)
+    tp, mp = hidden.shape[0], log_q.shape[1]
+    kernel = functools.partial(_bwd_kernel, num_neg=m, chunk=chunk)
+    dh, dlq, dtab = pl.pallas_call(
+        kernel,
+        grid=(tp // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, d), jnp.float32),
+            jax.ShapeDtypeStruct((tp, mp), jnp.float32),
+            jax.ShapeDtypeStruct((v, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((chunk, d), table.dtype),
+            pltpu.VMEM((1, d), table.dtype),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.SemaphoreType.DMA((chunk,)),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        input_output_aliases={7: 2},
+        interpret=interpret,
+    )(g2, hidden, log_q, neg_ids, pos_ids, lse2,
+      table, jnp.zeros((v, d), jnp.float32))
+    return dh[:t], dtab, dlq[:t, :m]

@@ -1,21 +1,49 @@
-"""Pure-jnp oracle for the fused shared-negative sampled-softmax CE."""
+"""Pure-jnp oracles for the fused sampled-softmax CE kernels.
+
+Collision masking uses the canonical `repro.core.sampled_softmax.NEG_INF`
+sentinel (large-finite, not -inf) — identical loss values, nan-free VJPs;
+see the note there.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.sampled_softmax import NEG_INF
+
 
 def sampled_ce_ref(hidden: jax.Array, pos_emb: jax.Array, neg_emb: jax.Array,
                    log_q: jax.Array, neg_ids: jax.Array,
                    pos_ids: jax.Array) -> jax.Array:
-    """hidden/pos_emb [T, D]; neg_emb [M, D]; log_q/neg_ids [M]; pos_ids [T].
-    Returns per-token corrected sampled-softmax CE [T] (Eq. 1 + collision
-    masking)."""
+    """Shared-negative oracle. hidden/pos_emb [T, D]; neg_emb [M, D];
+    log_q/neg_ids [M]; pos_ids [T]. Returns per-token corrected
+    sampled-softmax CE [T] (Eq. 1 + collision masking)."""
     h = hidden.astype(jnp.float32)
     m = neg_emb.shape[0]
     pos_logit = jnp.sum(h * pos_emb.astype(jnp.float32), axis=-1)    # [T]
     neg_logits = h @ neg_emb.T.astype(jnp.float32)                   # [T, M]
     corr = neg_logits - (jnp.log(float(m)) + log_q)[None, :]
-    corr = jnp.where(neg_ids[None, :] == pos_ids[:, None], -jnp.inf, corr)
+    corr = jnp.where(neg_ids[None, :] == pos_ids[:, None], NEG_INF, corr)
+    all_logits = jnp.concatenate([pos_logit[:, None], corr], axis=-1)
+    return jax.nn.logsumexp(all_logits, axis=-1) - pos_logit
+
+
+def sampled_ce_pt_ref(hidden: jax.Array, table: jax.Array, log_q: jax.Array,
+                      neg_ids: jax.Array, pos_ids: jax.Array) -> jax.Array:
+    """Per-token-negative oracle. hidden [T, D]; table [V, D] (native dtype);
+    log_q/neg_ids [T, M]; pos_ids [T]. Returns per-token loss [T].
+
+    This is the memory-hungry formulation the per-token Pallas kernel
+    replaces: the [T, M, D] negative gather and the [T, M] corrected-logit
+    matrix are materialized here.
+    """
+    h = hidden.astype(jnp.float32)
+    m = neg_ids.shape[-1]
+    pos_e = table[pos_ids].astype(jnp.float32)                       # [T, D]
+    pos_logit = jnp.sum(h * pos_e, axis=-1)                          # [T]
+    neg_e = table[neg_ids].astype(jnp.float32)                       # [T, M, D]
+    neg_logits = jnp.einsum("td,tmd->tm", h, neg_e)
+    corr = neg_logits - (jnp.log(float(m)) + log_q)
+    corr = jnp.where(neg_ids == pos_ids[:, None], NEG_INF, corr)
     all_logits = jnp.concatenate([pos_logit[:, None], corr], axis=-1)
     return jax.nn.logsumexp(all_logits, axis=-1) - pos_logit

@@ -140,11 +140,20 @@ def _with_sharding(abs_tree, sharding_tree):
         abs_tree, sharding_tree)
 
 
+_FUSED_HEAD_MODES = {
+    # --fused-head -> (fused_head, interpret) args for steps.make_train_step
+    "auto": (None, False),        # cfg + backend decide (CPU -> jnp path)
+    "on": (True, False),          # force fused (compiled Pallas; TPU only)
+    "interpret": (True, True),    # fused graph under the Pallas interpreter
+    "off": (False, False),        # force the jnp oracle path
+}
+
+
 def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
                head_mode: str = "midx", layers_override: int | None = None,
                family_twin: bool = False, attn_impl: str = "flash",
                moe_impl: str = "shard_map", pad_heads: bool = False,
-               proposal: str | None = None):
+               proposal: str | None = None, fused_head: str = "auto"):
     import dataclasses as _dc
     from repro.models import attention as attn_mod
     from repro.models import moe as moe_mod
@@ -202,8 +211,10 @@ def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
             idx_sh = _named(mesh, index_specs(idx_abs))
             bsh = NamedSharding(mesh, bspec)
             batch = steps_mod.batch_struct(cfg, shape, batch_sharding=bsh)
+            fh, interp = _FUSED_HEAD_MODES[fused_head]
             fn = steps_mod.make_train_step(cfg, opt, head_mode=head_mode,
-                                           window=window)
+                                           window=window, fused_head=fh,
+                                           interpret=interp)
             jitted = jax.jit(fn,
                              out_shardings=(p_sh, opt_sh, None),
                              donate_argnums=(0, 1))
@@ -288,11 +299,13 @@ def analyze(cfg, mesh, lowered, compiled, *, shape: ShapeConfig,
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              head_mode: str = "midx", out_dir: str = "experiments/dryrun",
              save_hlo: bool = False, attn_impl: str = "flash",
-             moe_impl: str = "shard_map", pad_heads: bool = False) -> dict:
+             moe_impl: str = "shard_map", pad_heads: bool = False,
+             fused_head: str = "auto") -> dict:
     shape = shape_by_name(shape_name)
     cfg, mesh, lowered, compiled, times = lower_cell(
         arch, shape, multi_pod=multi_pod, head_mode=head_mode,
-        attn_impl=attn_impl, moe_impl=moe_impl, pad_heads=pad_heads)
+        attn_impl=attn_impl, moe_impl=moe_impl, pad_heads=pad_heads,
+        fused_head=fused_head)
     rec = analyze(cfg, mesh, lowered, compiled, shape=shape,
                   head_mode=head_mode)
     rec.update(times)
@@ -387,6 +400,11 @@ def main():
                     help="autodiff = paper-naive baseline (§Perf before)")
     ap.add_argument("--moe", choices=("shard_map", "vmap"),
                     default="shard_map")
+    ap.add_argument("--fused-head", choices=tuple(_FUSED_HEAD_MODES),
+                    default="auto",
+                    help="fused Pallas MIDX head: auto (backend decides), "
+                         "on (compiled kernels), interpret (fused graph via "
+                         "the Pallas interpreter — compiles anywhere), off")
     args = ap.parse_args()
 
     archs = ([args.arch] if args.arch else
@@ -416,7 +434,8 @@ def main():
                             run_cell(arch, shape.name, multi_pod=mp,
                                      head_mode=hm, out_dir=args.out,
                                      save_hlo=args.save_hlo,
-                                     attn_impl=args.attn, moe_impl=args.moe)
+                                     attn_impl=args.attn, moe_impl=args.moe,
+                                     fused_head=args.fused_head)
                     except Exception as e:
                         failures.append((arch, shape.name, mp, hm, str(e)))
                         print(f"[dryrun] FAIL {arch} {shape.name} "

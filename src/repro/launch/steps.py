@@ -29,8 +29,16 @@ def _model_extras(cfg: ModelConfig, batch: dict) -> dict:
 
 
 def make_loss_fn(cfg: ModelConfig, *, head_mode: Optional[str] = None,
-                 window: Optional[int] = None) -> Callable:
-    """loss(params, index, batch, key) -> (loss, metrics)."""
+                 window: Optional[int] = None,
+                 fused_head: Optional[bool] = None,
+                 interpret: bool = False) -> Callable:
+    """loss(params, index, batch, key) -> (loss, metrics).
+
+    `fused_head` / `interpret` select the fused Pallas MIDX head
+    (DESIGN §3): None defers to cfg.head.use_fused_head + the backend via
+    kernels.dispatch; interpret=True runs the kernels under the Pallas
+    interpreter so the fused graph lowers on any backend (dry-run, tests).
+    """
     mode = head_mode or cfg.head.mode
 
     def loss_fn(params, index, batch, key):
@@ -40,7 +48,8 @@ def make_loss_fn(cfg: ModelConfig, *, head_mode: Optional[str] = None,
             ce = heads.loss_full(cfg, params, out["hidden"], batch["labels"])
         else:
             ce = heads.loss_midx(cfg, params, index, out["hidden"],
-                                 batch["labels"], key)
+                                 batch["labels"], key, fused=fused_head,
+                                 interpret=interpret)
         loss = ce + cfg.router_aux_weight * out["aux_loss"]
         return loss, {"ce": ce, "aux": out["aux_loss"]}
 
@@ -50,8 +59,11 @@ def make_loss_fn(cfg: ModelConfig, *, head_mode: Optional[str] = None,
 def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
                     head_mode: Optional[str] = None,
                     window: Optional[int] = None,
-                    clip_norm: float = 1.0) -> Callable:
-    loss_fn = make_loss_fn(cfg, head_mode=head_mode, window=window)
+                    clip_norm: float = 1.0,
+                    fused_head: Optional[bool] = None,
+                    interpret: bool = False) -> Callable:
+    loss_fn = make_loss_fn(cfg, head_mode=head_mode, window=window,
+                           fused_head=fused_head, interpret=interpret)
 
     def train_step(params, opt_state, index, batch, key):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -82,7 +94,9 @@ def make_sharded_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh, *,
                             grad_transport: str = "fp32",
                             head_mode: Optional[str] = None,
                             window: Optional[int] = None,
-                            clip_norm: float = 1.0) -> Callable:
+                            clip_norm: float = 1.0,
+                            fused_head: Optional[bool] = None,
+                            interpret: bool = False) -> Callable:
     """Data-parallel train step under shard_map with an *explicit* gradient
     all-reduce, so the transport precision is a config choice (DESIGN §4):
 
@@ -109,7 +123,8 @@ def make_sharded_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh, *,
     from repro.dist import collectives
 
     assert grad_transport in ("fp32", "bf16", "int8_ef"), grad_transport
-    loss_fn = make_loss_fn(cfg, head_mode=head_mode, window=window)
+    loss_fn = make_loss_fn(cfg, head_mode=head_mode, window=window,
+                           fused_head=fused_head, interpret=interpret)
     axes = tuple(data_axes)
     ax = axes if len(axes) > 1 else axes[0]
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))

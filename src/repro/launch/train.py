@@ -65,6 +65,8 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
                head_mode: Optional[str] = None, log_every: int = 20,
                seed: int = 0, mesh=None, total_steps: Optional[int] = None,
                grad_transport: str = "fp32",
+               fused_head: Optional[bool] = None,
+               fused_interpret: bool = False,
                on_metrics: Optional[Callable[[int, dict], None]] = None):
     """Single-process training loop (the multi-host launcher shards this).
 
@@ -107,10 +109,12 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
                              f"the data-parallel degree {dp}")
         train_step = jax.jit(steps_mod.make_sharded_train_step(
             cfg, optimizer, mesh, data_axes=data_axes,
-            grad_transport=grad_transport, head_mode=head_mode))
+            grad_transport=grad_transport, head_mode=head_mode,
+            fused_head=fused_head, interpret=fused_interpret))
     else:
-        train_step = jax.jit(steps_mod.make_train_step(cfg, optimizer,
-                                                       head_mode=head_mode))
+        train_step = jax.jit(steps_mod.make_train_step(
+            cfg, optimizer, head_mode=head_mode, fused_head=fused_head,
+            interpret=fused_interpret))
     ef = steps_mod.init_grad_transport_state(params, grad_transport, dp)
     refresh = jax.jit(steps_mod.make_refresh_step(cfg))
 
@@ -178,15 +182,28 @@ def main():
     ap.add_argument("--grad-transport", default="fp32",
                     choices=("fp32", "bf16", "int8_ef"),
                     help="gradient all-reduce transport (DESIGN §4)")
+    ap.add_argument("--fused-head", default="auto",
+                    choices=("auto", "on", "interpret", "off"),
+                    help="fused Pallas MIDX head (DESIGN §3): auto = "
+                         "cfg.head.use_fused_head gated on backend; on = "
+                         "compiled kernels (TPU only); interpret = fused "
+                         "graph via the Pallas interpreter (any backend)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     mesh = make_debug_mesh(args.dp, 1) if args.dp > 0 else None
+    fused = {"auto": None, "on": True, "interpret": True,
+             "off": False}[args.fused_head]
+    if args.fused_head == "on" and jax.default_backend() != "tpu":
+        raise SystemExit("--fused-head on compiles Pallas kernels and needs "
+                         "a TPU backend; use --fused-head interpret here")
     train_loop(cfg, steps=args.steps, batch_size=args.batch, seq_len=args.seq,
                ckpt_dir=args.ckpt, head_mode=args.head, lr=args.lr,
-               mesh=mesh, grad_transport=args.grad_transport)
+               mesh=mesh, grad_transport=args.grad_transport,
+               fused_head=fused,
+               fused_interpret=args.fused_head == "interpret")
 
 
 if __name__ == "__main__":

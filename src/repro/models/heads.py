@@ -19,6 +19,8 @@ from repro.core import midx as midx_mod
 from repro.core.index import MultiIndex
 from repro.core.sampled_softmax import (full_softmax_loss,
                                         sampled_softmax_loss)
+from repro.kernels import dispatch as kd
+from repro.kernels.sampled_ce.ops import sampled_ce_op, sampled_ce_pt_op
 from repro.models.model import class_embeddings, logits_full
 
 
@@ -40,42 +42,81 @@ def loss_full(cfg: ModelConfig, params: dict, hidden: jax.Array,
               labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
     logits = logits_full(cfg, params, hidden)
     # padded vocab rows never win: they are random-init but labels < V.
-    loss = full_softmax_loss(logits, labels)
-    if mask is not None:
-        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-    return jnp.mean(loss)
+    return _masked_mean(full_softmax_loss(logits, labels), mask)
 
 
 def loss_midx(cfg: ModelConfig, params: dict, index: MultiIndex,
               hidden: jax.Array, labels: jax.Array, key: jax.Array,
-              mask: Optional[jax.Array] = None) -> jax.Array:
-    """MIDX sampled softmax CE. hidden [B,S,D], labels [B,S]."""
+              mask: Optional[jax.Array] = None, *,
+              fused: Optional[bool] = None,
+              interpret: bool = False) -> jax.Array:
+    """MIDX sampled softmax CE. hidden [B,S,D], labels [B,S].
+
+    Two implementations behind `cfg.head.use_fused_head` (DESIGN §3):
+
+    fused (the TPU path): proposal scoring runs the one-pass midx_probs
+      kernel via the `tables_fn` hook; the CE runs flash-CE — per-token
+      proposals through `sampled_ce_pt_op` (in-kernel gather from the
+      native-dtype table, fused Pallas backward), shared-negative proposals
+      through `sampled_ce_op` vmapped over the batch. No [B,S,M,D] gather,
+      no [B,S,M] corrected-logit tensor, and no fp32 copy of the [V,D]
+      table in the traced graph.
+
+    unfused (jnp oracle): the reference formulation parity tests compare
+      against; also casts per gathered row, never the whole table.
+
+    `fused=None` defers to kernels.dispatch (backend-gated); `interpret`
+    runs the kernels under the Pallas interpreter (CPU parity tests).
+    """
     table = class_embeddings(cfg, params)
     m = cfg.head.num_negatives
     h32 = hidden.astype(jnp.float32)
-    tab32 = table.astype(jnp.float32)
-
-    pos_e = tab32[labels]                                     # [B,S,D]
-    pos_logit = jnp.sum(h32 * pos_e, axis=-1)                 # [B,S]
+    b, s, d = h32.shape
+    interpret = interpret or kd.interpret_default()
+    use_fused = kd.fused_head_active(cfg.head, fused=fused,
+                                    interpret=interpret)
 
     proposal = cfg.head.proposal
     if proposal == "per_token":
         # two-stage form: O(K) Gumbels per draw instead of a K² table/token
-        draw = midx_mod.sample_twostage(index, key, h32, m)   # ids [B,S,M]
-        neg_e = tab32[draw.ids]                               # [B,S,M,D]
+        tables_fn = (kd.midx_tables_fn(use_kernel=True, interpret=interpret)
+                     if use_fused else None)
+        draw = midx_mod.sample_twostage(index, key, h32, m,
+                                        tables_fn=tables_fn)  # ids [B,S,M]
+        if use_fused:
+            loss = sampled_ce_pt_op(
+                h32.reshape(b * s, d), table,
+                draw.log_q.reshape(b * s, m), draw.ids.reshape(b * s, m),
+                labels.reshape(b * s), interpret).reshape(b, s)
+            return _masked_mean(loss, mask)
+        pos_logit = jnp.sum(h32 * table[labels].astype(jnp.float32), axis=-1)
+        neg_e = table[draw.ids].astype(jnp.float32)           # [B,S,M,D]
         neg_logits = jnp.einsum("bsd,bsmd->bsm", h32, neg_e)
         log_q, neg_ids = draw.log_q, draw.ids
     else:
         sampler = (midx_mod.sample_pooled if proposal == "pooled"
                    else midx_mod.sample_mixture)
         draw = sampler(index, key, h32, m)                    # ids [B,M]
-        neg_e = tab32[draw.ids]                               # [B,M,D]
+        if use_fused:
+            pos_emb = table[labels]                           # [B,S,D] native
+            neg_emb = table[draw.ids]                         # [B,M,D] native
+            loss = jax.vmap(
+                lambda hb, pe, ne, lq, ni, pi:
+                sampled_ce_op(hb, pe, ne, lq, ni, pi, interpret)
+            )(h32, pos_emb, neg_emb, draw.log_q, draw.ids, labels)
+            return _masked_mean(loss, mask)
+        pos_logit = jnp.sum(h32 * table[labels].astype(jnp.float32), axis=-1)
+        neg_e = table[draw.ids].astype(jnp.float32)           # [B,M,D]
         neg_logits = jnp.einsum("bsd,bmd->bsm", h32, neg_e)
         log_q = draw.log_q[:, None, :]                        # broadcast over S
         neg_ids = draw.ids[:, None, :]
 
     loss = sampled_softmax_loss(pos_logit, neg_logits, log_q, neg_ids, labels,
                                 cfg.head.mask_collisions)
+    return _masked_mean(loss, mask)
+
+
+def _masked_mean(loss: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
     if mask is not None:
         return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
     return jnp.mean(loss)
@@ -89,17 +130,27 @@ class MidxDecodeOut(NamedTuple):
 def midx_decode_head(cfg: ModelConfig, params: dict, index: MultiIndex,
                      hidden: jax.Array, key: jax.Array,
                      num_candidates: int = 64,
-                     temperature: float = 1.0) -> MidxDecodeOut:
+                     temperature: float = 1.0, *,
+                     fused: Optional[bool] = None,
+                     interpret: bool = False) -> MidxDecodeOut:
     """Approximate next-token sampling without the [B,V] logits matrix.
 
     Draw `num_candidates` via MIDX, rescore exactly (o_i), softmax over the
     candidate set with IS correction — O(K² + M·D) per token (beyond-paper).
+    On the fused path the candidate scoring runs the midx_probs kernel
+    through the same `tables_fn` hook as training.
     """
-    table = class_embeddings(cfg, params).astype(jnp.float32)
+    table = class_embeddings(cfg, params)
     h = hidden.astype(jnp.float32)
     k_draw, k_pick = jax.random.split(key)
-    draw = midx_mod.sample(index, k_draw, h, num_candidates)  # [B,M]
-    cand_e = table[draw.ids]                                  # [B,M,D]
+    interpret = interpret or kd.interpret_default()
+    tables_fn = (kd.midx_tables_fn(use_kernel=True, interpret=interpret)
+                 if kd.fused_head_active(cfg.head, fused=fused,
+                                         interpret=interpret) else None)
+    draw = midx_mod.sample(index, k_draw, h, num_candidates,
+                           tables_fn=tables_fn)                # [B,M]
+    # cast per gathered row — never the whole [V, D] table (DESIGN §3)
+    cand_e = table[draw.ids].astype(jnp.float32)              # [B,M,D]
     logits = jnp.einsum("bd,bmd->bm", h, cand_e) / temperature
     corrected = logits - draw.log_q                           # IS-corrected
     pick = jax.random.categorical(k_pick, corrected, axis=-1) # [B]

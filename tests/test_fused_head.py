@@ -1,0 +1,183 @@
+"""Fused-vs-unfused MIDX head parity (DESIGN §3, interpret-mode kernels).
+
+The fused path (kernel proposal tables + flash-CE + fused Pallas backward)
+must match the jnp oracle path in loss value AND gradients — w.r.t. both
+params and hidden — to <=1e-5 for every proposal mode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HeadConfig, ModelConfig
+from repro.models import heads, init_params
+
+
+def _cfg(proposal: str, dtype: str = "float32") -> ModelConfig:
+    return ModelConfig(
+        name="fused-test", family="dense", num_layers=1, d_model=32,
+        num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=200, head_dim=16,
+        vocab_pad_multiple=8, remat=False, dtype=dtype,
+        head=HeadConfig(mode="midx", midx_k=8, num_negatives=12,
+                        proposal=proposal, kmeans_iters=2))
+
+
+def _setup(cfg, key, b=2, s=8):
+    params = init_params(cfg, key)
+    index = heads.init_head_state(cfg, params, jax.random.fold_in(key, 1))
+    h = jax.random.normal(jax.random.fold_in(key, 2),
+                          (b, s, cfg.d_model)) * 0.3
+    labels = jax.random.randint(jax.random.fold_in(key, 3), (b, s), 0,
+                                cfg.vocab_size)
+    return params, index, h, labels, jax.random.fold_in(key, 4)
+
+
+@pytest.mark.parametrize("proposal", ["per_token", "pooled", "mixture"])
+def test_fused_head_value_and_grad_parity(proposal, key):
+    cfg = _cfg(proposal)
+    params, index, h, labels, skey = _setup(cfg, key)
+
+    def loss(p, hh, fused):
+        return heads.loss_midx(cfg, p, index, hh, labels, skey,
+                               fused=fused, interpret=fused)
+
+    lu, gu = jax.value_and_grad(lambda p, hh: loss(p, hh, False),
+                                argnums=(0, 1))(params, h)
+    lf, gf = jax.value_and_grad(lambda p, hh: loss(p, hh, True),
+                                argnums=(0, 1))(params, h)
+    np.testing.assert_allclose(float(lu), float(lf), atol=1e-5, rtol=1e-5)
+    flat_u, tree_u = jax.tree_util.tree_flatten(gu)
+    flat_f, tree_f = jax.tree_util.tree_flatten(gf)
+    assert tree_u == tree_f
+    for a, b in zip(flat_u, flat_f):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_fused_head_masked_mean_parity(key):
+    cfg = _cfg("per_token")
+    params, index, h, labels, skey = _setup(cfg, key)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 9),
+                               labels.shape) > 0.3).astype(jnp.float32)
+    lu = heads.loss_midx(cfg, params, index, h, labels, skey, mask,
+                         fused=False)
+    lf = heads.loss_midx(cfg, params, index, h, labels, skey, mask,
+                         fused=True, interpret=True)
+    np.testing.assert_allclose(float(lu), float(lf), atol=1e-5, rtol=1e-5)
+
+
+def test_fused_head_bf16_table(key):
+    """Native-dtype table: the fused path must not fp32-cast the [V, D]
+    table; with a bf16 table both paths gather-then-cast and must agree."""
+    cfg = _cfg("per_token", dtype="bfloat16")
+    params, index, h, labels, skey = _setup(cfg, key)
+    lu = heads.loss_midx(cfg, params, index, h, labels, skey, fused=False)
+    lf = heads.loss_midx(cfg, params, index, h, labels, skey, fused=True,
+                         interpret=True)
+    np.testing.assert_allclose(float(lu), float(lf), atol=1e-5, rtol=1e-5)
+
+
+def test_fused_head_no_collision_masking_falls_back(key):
+    """mask_collisions=False is only implemented by the jnp path; dispatch
+    must keep the fused flag from engaging the kernels."""
+    from repro.kernels import dispatch as kd
+    cfg = _cfg("per_token").with_head(mask_collisions=False)
+    assert not kd.fused_head_active(cfg.head, fused=True, interpret=True)
+    params, index, h, labels, skey = _setup(cfg, key)
+    lf = heads.loss_midx(cfg, params, index, h, labels, skey, fused=True,
+                         interpret=True)
+    assert np.isfinite(float(lf))
+
+
+def test_fused_graph_has_no_gather_or_fp32_table(key):
+    """Acceptance: the fused forward's traced graph contains neither the
+    [B,S,M,D] / [T,M,D] negative-embedding gather nor any fp32 tensor of
+    the [Vpad, D] table's shape. With the class table stored in bf16, any
+    f32[Vpad, D] value in the graph would BE the per-step fp32 table copy
+    the fusion deletes."""
+    cfg = _cfg("per_token", dtype="bfloat16")
+    params, index, h, labels, skey = _setup(cfg, key)
+    params = dict(params, embed=params["embed"].astype(jnp.bfloat16))
+    b, s = labels.shape
+    m, d, vpad = cfg.head.num_negatives, cfg.d_model, cfg.padded_vocab
+
+    def loss(fused):
+        return jax.make_jaxpr(
+            lambda p, hh: heads.loss_midx(cfg, p, index, hh, labels, skey,
+                                          fused=fused, interpret=fused)
+        )(params, h)
+
+    gather4d = f"[{b},{s},{m},{d}]"
+    gather3d = f"[{b * s},{m},{d}]"
+    table_f32 = f"f32[{vpad},{d}]"
+    fused_txt = str(loss(True))
+    assert gather4d not in fused_txt and gather3d not in fused_txt
+    assert table_f32 not in fused_txt
+    # sanity: the gather detector actually fires on the unfused formulation
+    unfused_txt = str(loss(False))
+    assert gather4d in unfused_txt
+
+
+def test_sample_tables_fn_same_draws(key):
+    """core.midx.sample with the kernel-backed tables_fn rebuilds the joint
+    tile from kernel s1/s2 — same draws and log_q as the jnp path."""
+    from repro.core import build, midx
+    from repro.kernels import dispatch as kd
+    emb = jax.random.normal(key, (300, 32)) * 0.5
+    idx = build(jax.random.fold_in(key, 1), emb, kind="rq", k=8, iters=3)
+    z = jax.random.normal(jax.random.fold_in(key, 2), (5, 32)) * 0.3
+    skey = jax.random.fold_in(key, 3)
+    d_ref = midx.sample(idx, skey, z, 16)
+    d_ker = midx.sample(idx, skey, z, 16,
+                        tables_fn=kd.midx_tables_fn(use_kernel=True,
+                                                    interpret=True))
+    np.testing.assert_array_equal(np.asarray(d_ref.ids), np.asarray(d_ker.ids))
+    np.testing.assert_allclose(np.asarray(d_ref.log_q),
+                               np.asarray(d_ker.log_q), atol=1e-5, rtol=1e-5)
+
+
+def test_midx_decode_head_fused_matches(key):
+    """The decode head with the kernel tables_fn draws the same tokens."""
+    cfg = _cfg("per_token")
+    params, index, h, _, _ = _setup(cfg, key)
+    hb = h[:, 0, :]                               # [B, D] decode queries
+    dkey = jax.random.fold_in(key, 7)
+    out_u = heads.midx_decode_head(cfg, params, index, hb, dkey,
+                                   num_candidates=16, fused=False)
+    out_f = heads.midx_decode_head(cfg, params, index, hb, dkey,
+                                   num_candidates=16, fused=True,
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_u.token),
+                                  np.asarray(out_f.token))
+    np.testing.assert_allclose(np.asarray(out_u.log_q),
+                               np.asarray(out_f.log_q), atol=1e-5, rtol=1e-5)
+
+
+def test_fused_train_step_compiles_and_runs(key):
+    """The launch/steps.py wiring: a full fused train step (forward +
+    fused backward + optimizer) lowers and executes under interpret."""
+    from repro.launch import steps as steps_mod
+    from repro.optim import adamw
+    cfg = _cfg("per_token")
+    params = init_params(cfg, key)
+    index = heads.init_head_state(cfg, params, jax.random.fold_in(key, 1))
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(steps_mod.make_train_step(cfg, opt, fused_head=True,
+                                             interpret=True))
+    batch = {
+        "tokens": jax.random.randint(jax.random.fold_in(key, 2), (2, 8), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.fold_in(key, 3), (2, 8), 0,
+                                     cfg.vocab_size),
+    }
+    params2, opt_state, metrics = step(params, opt_state, index, batch,
+                                       jax.random.fold_in(key, 4))
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved (the fused backward produced real grads)
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, params2)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0.0

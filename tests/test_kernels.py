@@ -6,13 +6,15 @@ import pytest
 
 from repro.core import build
 from repro.core.midx import twostage_tables
+from repro.core.sampled_softmax import NEG_INF, sampled_softmax_loss
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ops import attention_op
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.midx_probs.ops import proposal_tables
-from repro.kernels.sampled_ce.ops import sampled_ce_op
-from repro.kernels.sampled_ce.ref import sampled_ce_ref
+from repro.kernels.sampled_ce.ops import sampled_ce_op, sampled_ce_pt_op
+from repro.kernels.sampled_ce.ref import sampled_ce_pt_ref, sampled_ce_ref
 from repro.kernels.sampled_ce.sampled_ce import sampled_ce
+from repro.kernels.sampled_ce import sampled_ce as sampled_ce_mod
 
 
 @pytest.mark.parametrize("b,s,h,kv,hd,dtype", [
@@ -76,26 +78,149 @@ def test_sampled_ce_sweep(t, d, m, dtype, key):
     log_q = jnp.full((m,), -np.log(v), jnp.float32)
     pe, ne = table[pos_ids], table[neg_ids]
     ref = sampled_ce_ref(h, pe, ne, log_q, neg_ids, pos_ids)
-    ker = sampled_ce(h, pe, ne, log_q, neg_ids, pos_ids,
-                     block_t=128, block_m=128, interpret=True)
+    ker, _ = sampled_ce(h, pe, ne, log_q, neg_ids, pos_ids,
+                        block_t=128, block_m=128, interpret=True)
     tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), atol=tol,
                                rtol=tol)
 
 
-def test_sampled_ce_grads(key):
-    t, d, m, v = 128, 32, 128, 500
+@pytest.mark.parametrize("t,m", [
+    (300, 100),     # neither divides the block: both pad paths
+    (100, 256),     # T smaller than a block
+    (256, 7),       # tiny ragged M
+])
+def test_sampled_ce_pad_to_block(t, m, key):
+    """Arbitrary T and M: the kernel pads to its grid internally and must
+    still match the unpadded oracle exactly."""
+    d, v = 32, 500
+    h = jax.random.normal(jax.random.fold_in(key, 1), (t, d)) * 0.3
+    table = jax.random.normal(jax.random.fold_in(key, 2), (v, d)) * 0.3
+    pos_ids = jax.random.randint(jax.random.fold_in(key, 3), (t,), 0, v)
+    neg_ids = jax.random.randint(jax.random.fold_in(key, 4), (m,), 0, v)
+    log_q = jnp.full((m,), -np.log(v), jnp.float32)
+    pe, ne = table[pos_ids], table[neg_ids]
+    ref = sampled_ce_ref(h, pe, ne, log_q, neg_ids, pos_ids)
+    ker, _ = sampled_ce(h, pe, ne, log_q, neg_ids, pos_ids,
+                        block_t=128, block_m=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_collision_mask_semantics_unified(key):
+    """Satellite: one NEG_INF sentinel everywhere. The kernel constant IS
+    the core constant, and kernel/oracle/core losses agree bit-for-bit on a
+    collision-saturated batch (every negative == some positive)."""
+    assert sampled_ce_mod.NEG_INF == NEG_INF
+    t, d, m, v = 64, 16, 32, 8          # v=8 << m: collisions guaranteed
+    h = jax.random.normal(jax.random.fold_in(key, 1), (t, d)) * 0.3
+    table = jax.random.normal(jax.random.fold_in(key, 2), (v, d)) * 0.3
+    pos_ids = jax.random.randint(jax.random.fold_in(key, 3), (t,), 0, v)
+    neg_ids = jax.random.randint(jax.random.fold_in(key, 4), (m,), 0, v)
+    log_q = jnp.full((m,), -np.log(v), jnp.float32)
+    pe, ne = table[pos_ids], table[neg_ids]
+    assert bool(jnp.any(neg_ids[None, :] == pos_ids[:, None]))
+    ref = sampled_ce_ref(h, pe, ne, log_q, neg_ids, pos_ids)
+    ker, _ = sampled_ce(h, pe, ne, log_q, neg_ids, pos_ids,
+                        block_t=32, block_m=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), atol=1e-6,
+                               rtol=1e-6)
+    # core's jnp loss (the heads-path oracle) masks to the same sentinel
+    pos_logit = jnp.sum(h * pe, axis=-1)
+    neg_logits = h @ ne.T
+    core = sampled_softmax_loss(
+        pos_logit, neg_logits, jnp.broadcast_to(log_q, (t, m)),
+        jnp.broadcast_to(neg_ids, (t, m)), pos_ids)
+    np.testing.assert_allclose(np.asarray(core), np.asarray(ref), atol=1e-6,
+                               rtol=1e-6)
+    # gradients through masked entries are exactly zero, not nan
+    g = jax.grad(lambda lq: sampled_ce_ref(h, pe, ne, lq, neg_ids,
+                                           pos_ids).sum())(log_q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+@pytest.mark.parametrize("t,d,m,v,dtype", [
+    (64, 32, 16, 500, jnp.float32),
+    (36, 16, 10, 50, jnp.float32),    # ragged T and M (padding paths)
+    (32, 64, 8, 200, jnp.bfloat16),   # native bf16 table
+])
+def test_sampled_ce_pt_sweep(t, d, m, v, dtype, key):
+    h = jax.random.normal(jax.random.fold_in(key, 1), (t, d)) * 0.3
+    table = (jax.random.normal(jax.random.fold_in(key, 2), (v, d)) * 0.3
+             ).astype(dtype)
+    pos_ids = jax.random.randint(jax.random.fold_in(key, 3), (t,), 0, v)
+    neg_ids = jax.random.randint(jax.random.fold_in(key, 4), (t, m), 0, v)
+    log_q = (-np.log(v) + 0.1 * jax.random.normal(jax.random.fold_in(key, 5),
+                                                  (t, m)))
+    ref = sampled_ce_pt_ref(h, table, log_q, neg_ids, pos_ids)
+    ker = sampled_ce_pt_op(h, table, log_q, neg_ids, pos_ids, True, 16, 4)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), atol=tol,
+                               rtol=tol)
+
+
+def test_sampled_ce_pt_fused_backward(key):
+    """The fused Pallas backward (dh + in-kernel d-table scatter + dlq)
+    vs autodiff through the jnp oracle."""
+    t, d, m, v = 48, 24, 12, 100
+    h = jax.random.normal(jax.random.fold_in(key, 1), (t, d)) * 0.3
+    table = jax.random.normal(jax.random.fold_in(key, 2), (v, d)) * 0.3
+    pos_ids = jax.random.randint(jax.random.fold_in(key, 3), (t,), 0, v)
+    neg_ids = jax.random.randint(jax.random.fold_in(key, 4), (t, m), 0, v)
+    log_q = (-np.log(v) + 0.1 * jax.random.normal(jax.random.fold_in(key, 5),
+                                                  (t, m)))
+    g1 = jax.grad(lambda h, tb, lq: sampled_ce_pt_op(
+        h, tb, lq, neg_ids, pos_ids, True, 16, 4).mean(),
+        argnums=(0, 1, 2))(h, table, log_q)
+    g2 = jax.grad(lambda h, tb, lq: sampled_ce_pt_ref(
+        h, tb, lq, neg_ids, pos_ids).mean(),
+        argnums=(0, 1, 2))(h, table, log_q)
+    for name, a, b in zip(("dh", "dtab", "dlq"), g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   rtol=1e-4, err_msg=name)
+
+
+def test_midx_probs_grad(key):
+    """The kernel proposal tables are differentiable (custom_vjp): d/dz of
+    log Q built from the tables matches the jnp oracle path."""
+    emb = jax.random.normal(key, (300, 32)) * 0.5
+    idx = build(jax.random.fold_in(key, 1), emb, kind="rq", k=8, iters=3)
+    z = jax.random.normal(jax.random.fold_in(key, 2), (40, 32)) * 0.3
+
+    def logq_sum(z, use_kernel):
+        if use_kernel:
+            s1, s2, lpsi, lse = proposal_tables(idx, z, use_kernel=True,
+                                                block_t=16, interpret=True)
+        else:
+            s1, s2, lpsi, lse = twostage_tables(idx, z)
+        return jnp.sum(s1 + lpsi - lse[..., None]) + jnp.sum(s2)
+
+    g_k = jax.grad(lambda z: logq_sum(z, True))(z)
+    g_r = jax.grad(lambda z: logq_sum(z, False))(z)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r), atol=1e-5,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("t,m", [
+    (128, 128),
+    (90, 70),       # ragged: the fused backward's padding paths
+])
+def test_sampled_ce_grads(t, m, key):
+    """The fused Pallas backward (sampled_ce_bwd via sampled_ce_op) vs
+    autodiff through the jnp oracle, all four gradients."""
+    d, v = 32, 500
     h = jax.random.normal(key, (t, d)) * 0.3
     table = jax.random.normal(jax.random.fold_in(key, 1), (v, d)) * 0.3
     pos_ids = jax.random.randint(jax.random.fold_in(key, 2), (t,), 0, v)
     neg_ids = jax.random.randint(jax.random.fold_in(key, 3), (m,), 0, v)
     log_q = jnp.full((m,), -np.log(v), jnp.float32)
     pe, ne = table[pos_ids], table[neg_ids]
-    g1 = jax.grad(lambda h, ne: sampled_ce_op(h, pe, ne, log_q, neg_ids,
-                                              pos_ids, True).mean(),
-                  argnums=(0, 1))(h, ne)
-    g2 = jax.grad(lambda h, ne: sampled_ce_ref(h, pe, ne, log_q, neg_ids,
-                                               pos_ids).mean(),
-                  argnums=(0, 1))(h, ne)
-    for a, b in zip(g1, g2):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    g1 = jax.grad(lambda h, pe, ne, lq: sampled_ce_op(
+        h, pe, ne, lq, neg_ids, pos_ids, True).mean(),
+        argnums=(0, 1, 2, 3))(h, pe, ne, log_q)
+    g2 = jax.grad(lambda h, pe, ne, lq: sampled_ce_ref(
+        h, pe, ne, lq, neg_ids, pos_ids).mean(),
+        argnums=(0, 1, 2, 3))(h, pe, ne, log_q)
+    for name, a, b in zip(("dh", "dpe", "dne", "dlq"), g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   err_msg=name)
