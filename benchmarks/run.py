@@ -18,8 +18,8 @@ import traceback
 
 from benchmarks import (bench_codewords, bench_grad_bias, bench_head_step,
                         bench_kl, bench_learnable, bench_lm_ppl, bench_recsys,
-                        bench_sample_size, bench_sampling_time, bench_xmc,
-                        roofline)
+                        bench_sample_size, bench_sampling_time, bench_serve,
+                        bench_xmc, roofline)
 
 ALL = {
     "sampling_time": bench_sampling_time,   # Fig 6 / Table 1
@@ -32,6 +32,7 @@ ALL = {
     "recsys": bench_recsys,                 # Table 7
     "xmc": bench_xmc,                       # Table 9
     "head_step": bench_head_step,           # fused vs unfused MIDX head (§3)
+    "serve": bench_serve,                   # engine: midx vs full head (§5)
     "roofline": roofline,                   # §Roofline (from dry-run JSONs)
 }
 

@@ -1,1 +1,2 @@
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import (CheckpointManager, save_serving_state,
+                                      restore_serving_state)

@@ -118,3 +118,31 @@ class CheckpointManager:
         else:
             out = [jnp.asarray(l) for l in cast]
         return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# serving checkpoints (DESIGN §5)
+# ---------------------------------------------------------------------------
+# The MIDX head's `MultiIndex` is a registered pytree, so its codebooks and
+# CSR layout ride along as ordinary leaves — one atomic step dir holds
+# everything the serving engine needs to restore sampling bit-exactly
+# (save → restore → identical draws; see tests/test_serve.py).
+
+def save_serving_state(root: str, step: int, params: Any, index: Any,
+                       metadata: Optional[dict] = None) -> str:
+    """Save a {"params", "index"} serving tree under `root`."""
+    return CheckpointManager(root).save(
+        step, {"params": params, "index": index}, metadata)
+
+
+def restore_serving_state(root: str, like_params: Any, like_index: Any,
+                          step: Optional[int] = None):
+    """Restore (params, index, metadata). `like_*` only provide tree
+    structure + leaf dtypes, so `jax.eval_shape` results work."""
+    mgr = CheckpointManager(root)
+    if step is None:
+        step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {root}")
+    tree = mgr.restore(step, {"params": like_params, "index": like_index})
+    return tree["params"], tree["index"], mgr.metadata(step)

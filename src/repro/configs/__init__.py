@@ -1,6 +1,6 @@
 """Assigned-architecture configs (public-literature sources; see each file)."""
-from repro.configs.base import (ModelConfig, HeadConfig, ShapeConfig,
-                                LM_SHAPES, shape_by_name)
+from repro.configs.base import (ModelConfig, HeadConfig, ServeConfig,
+                                ShapeConfig, LM_SHAPES, shape_by_name)
 
 from repro.configs.qwen2_moe_a2p7b import CONFIG as qwen2_moe_a2p7b
 from repro.configs.granite_moe_1b_a400m import CONFIG as granite_moe_1b_a400m

@@ -25,11 +25,42 @@ class HeadConfig:
     kmeans_iters: int = 8
     learnable_codebooks: bool = False
     mask_collisions: bool = True
+    # MIDX decode head (serving): candidates drawn per step and the sampling
+    # temperature — `heads.midx_decode_head` reads these when its arguments
+    # are left as None (DESIGN §5).
+    decode_candidates: int = 64
+    decode_temperature: float = 1.0
     # Route loss_midx through the fused Pallas head (kernel proposal tables
     # + flash-CE; DESIGN §3). Takes effect on backends that can run the
     # kernels (TPU, or interpret mode) — elsewhere kernels.dispatch falls
     # back to the jnp path, so this default is safe for the CPU suite.
     use_fused_head: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-engine shape knobs (repro.serve, DESIGN §5).
+
+    `max_slots` bounds the slot-packed decode batch; each slot owns
+    `pages_per_slot = ceil(max_seq / page_size)` page-table entries into a
+    shared pool of `num_pages` physical KV pages (0 → full residency:
+    every slot can hold max_seq tokens simultaneously, plus the reserved
+    trash page).
+    """
+    max_slots: int = 8
+    page_size: int = 16
+    max_seq: int = 256            # logical per-slot capacity (prompt + gen)
+    num_pages: int = 0            # 0 -> max_slots * pages_per_slot + 1
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.max_seq // self.page_size)
+
+    @property
+    def resolved_num_pages(self) -> int:
+        # +1 for the reserved trash page (physical page 0) inactive slots
+        # write into; it is never allocated to a request.
+        return self.num_pages or self.max_slots * self.pages_per_slot + 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +108,7 @@ class ModelConfig:
     remat: bool = True
     vocab_pad_multiple: int = 128
     head: HeadConfig = dataclasses.field(default_factory=HeadConfig)
+    serve: ServeConfig = dataclasses.field(default_factory=ServeConfig)
 
     @property
     def resolved_head_dim(self) -> int:
@@ -96,6 +128,9 @@ class ModelConfig:
 
     def with_head(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, head=dataclasses.replace(self.head, **kw))
+
+    def with_serve(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, serve=dataclasses.replace(self.serve, **kw))
 
     def reduced(self) -> "ModelConfig":
         """Tiny same-family variant for CPU smoke tests."""

@@ -27,7 +27,8 @@ NEG_INF = -1e30
 def flash_decode_seq_sharded(q, k_cache, v_cache, pos, mesh, *,
                              axis: str = "model", window: int | None = None):
     """q [B,1,H,hd]; k/v caches [B,Smax,KV,hd] sequence-sharded over `axis`;
-    pos scalar int32.  Returns [B,1,H,hd] replicated.
+    pos scalar int32 or a per-slot [B] vector (slot-packed serving,
+    DESIGN §5).  Returns [B,1,H,hd] replicated.
 
     Matches `models.attention.decode_attention(q, k, v, pos, window=...)`:
     cache entries beyond `pos` (and outside the sliding window) are masked.
@@ -48,10 +49,11 @@ def flash_decode_seq_sharded(q, k_cache, v_cache, pos, mesh, *,
         scores = jnp.einsum("bqkgh,bmkh->bkgqm", qg,
                             k.astype(jnp.float32))       # [b,kv,g,1,local]
         j = offset + jnp.arange(local)
-        ok = j <= pos
+        pos_col = jnp.reshape(jnp.asarray(pos), (-1, 1))   # [B,1] or [1,1]
+        ok = j[None, :] <= pos_col
         if window is not None:
-            ok &= j > pos - window
-        scores = jnp.where(ok[None, None, None, None, :], scores, NEG_INF)
+            ok &= j[None, :] > pos_col - window
+        scores = jnp.where(ok[:, None, None, None, :], scores, NEG_INF)
         # LSE merge across sequence shards. pos >= 0 guarantees at least one
         # unmasked column globally, so m is finite and masked terms vanish.
         m = jax.lax.pmax(jnp.max(scores, axis=-1), axis)  # [b,kv,g,1]

@@ -1,103 +1,159 @@
-"""Serving driver: batched prefill + decode with KV caches.
+"""Serving CLI: a thin driver over `repro.serve.Engine` (DESIGN §5).
 
-Two decode heads:
-  --head full : exact [B, V] logits each step (default)
-  --head midx : MIDX-approximate sampling head — no [B, V] matrix; draws
-                candidates through the index and rescores exactly
-                (beyond-paper application of the paper's sampler).
+Continuous batching over a paged KV pool, batched single-pass prefill, and
+two decode heads:
+  --head midx : MIDX-approximate sampling head (default) — no [B, V] matrix;
+                candidates drawn through one replicated index, rescored
+                exactly (beyond-paper application of the paper's sampler).
+  --head full : exact [B, V] logits each step — the O(V·D) fallback.
+
+The synthetic traffic driver is open-loop: arrival times are drawn ahead of
+time (Poisson at --rate req/s; 0 = all arrive at t0) and honored against
+wall-clock, independent of completions. Reports tokens/s and p50/p95/p99
+per-token latency, and verifies --verify requests against a solo replay
+(batched output must be identical to running the request alone).
 
 CPU demo:
-  PYTHONPATH=src python -m repro.launch.serve --arch paper-lm --tokens 32
+  PYTHONPATH=src python -m repro.launch.serve --traffic synthetic \
+      --requests 16 --max-slots 4 --head midx
 """
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch import steps as steps_mod
-from repro.models import (decode_step, forward, heads, init_decode_state,
-                          init_params, logits_full)
+from repro.configs.base import pad_to
+from repro.serve import Engine, Request
 
 
-def serve(cfg, *, batch: int, prompt_len: int, gen_tokens: int,
-          head: str = "full", seed: int = 0, window=None):
-    key = jax.random.PRNGKey(seed)
-    k_init, k_idx, k_gen = jax.random.split(key, 3)
-    params = init_params(cfg, k_init)
-    max_seq = prompt_len + gen_tokens + 1
+def prompt_buckets(prompt: int) -> list[int]:
+    """Prompt-length bucket set (all <= prompt, the documented max) — shared
+    by traffic generation and warmup so a warmed engine never compiles
+    during the measured run."""
+    return sorted({max(1, prompt // 2), max(1, (3 * prompt) // 4), prompt})
 
+
+def _make_request(cfg, rng, *, rid: int, plen: int, max_new: int, seed: int,
+                  arrival: float = 0.0) -> Request:
     kw = {}
     if cfg.family == "vlm":
-        kw["image_emb"] = jnp.zeros((batch, cfg.num_image_tokens, cfg.d_model),
-                                    jnp.dtype(cfg.dtype))
+        kw["image_emb"] = 0.1 * rng.standard_normal(
+            (cfg.num_image_tokens, cfg.d_model)).astype(np.float32)
     if cfg.family == "audio":
-        kw["frames"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model),
-                                 jnp.dtype(cfg.dtype))
+        kw["frames"] = 0.1 * rng.standard_normal(
+            (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    toks = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+    return Request(rid=rid, tokens=toks, max_new=max_new, seed=seed,
+                   arrival=arrival, **kw)
 
-    prompts = jax.random.randint(k_gen, (batch, prompt_len), 0, cfg.vocab_size)
 
-    # ---- prefill: teacher-forced pass to build the cache token by token
-    # (the production prefill uses the batched forward; here we keep the cache
-    #  layout identical to decode for simplicity and verify vs. forward())
-    state = init_decode_state(cfg, params, batch, max_seq, window=window, **kw)
-    index = heads.init_head_state(cfg, params, k_idx) if head == "midx" else None
-
-    @jax.jit
-    def step_fn(params, state, token, pos, key):
-        hidden, state = decode_step(cfg, params, token, pos, state,
-                                    window=window)
-        if head == "midx":
-            out = heads.midx_decode_head(cfg, params, index, hidden, key)
-            nxt = out.token
-        else:
-            logits = logits_full(cfg, params, hidden)
-            # restrict to the real vocab (padded tail never sampled)
-            logits = logits[:, : cfg.vocab_size]
-            nxt = jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
-        return nxt, state
-
-    toks = prompts
-    nxt = prompts[:, 0]
-    t0 = time.time()
-    for pos in range(prompt_len - 1):
-        _, state = step_fn(params, state, prompts[:, pos], jnp.int32(pos),
-                           jax.random.fold_in(k_gen, pos))
-    nxt = prompts[:, -1]
-    generated = []
-    for i in range(gen_tokens):
-        pos = prompt_len - 1 + i
-        nxt, state = step_fn(params, state, nxt, jnp.int32(pos),
-                             jax.random.fold_in(k_gen, 1000 + i))
-        generated.append(nxt)
-    gen = jnp.stack(generated, axis=1)
-    jax.block_until_ready(gen)
-    dt = time.time() - t0
-    total = batch * (prompt_len - 1 + gen_tokens)
-    print(f"[serve] head={head} batch={batch} prompt={prompt_len} "
-          f"gen={gen_tokens}: {dt:.2f}s ({1e3 * dt / max(total,1):.2f} ms/token)")
-    return np.asarray(jnp.concatenate([toks, gen], axis=1))
+def synthetic_requests(cfg, *, num: int, prompt: int, max_new: int,
+                       rate: float, seed: int) -> list[Request]:
+    """Open-loop synthetic traffic: mixed prompt lengths from a small bucket
+    set (bounded prefill compile count), Poisson arrivals at `rate` req/s."""
+    rng = np.random.default_rng(seed)
+    buckets = prompt_buckets(prompt)
+    arrivals = (np.cumsum(rng.exponential(1.0 / rate, size=num))
+                if rate > 0 else np.zeros(num))
+    return [_make_request(cfg, rng, rid=i, plen=int(rng.choice(buckets)),
+                          max_new=max_new, seed=seed,
+                          arrival=float(arrivals[i]))
+            for i in range(num)]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-lm")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--head", default="full", choices=("full", "midx"))
+    ap.add_argument("--traffic", default="synthetic", choices=("synthetic",))
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate in req/s (0 = all at t0)")
+    ap.add_argument("--prompt", type=int, default=8,
+                    help="max prompt length (lengths mix below it)")
+    ap.add_argument("--tokens", type=int, default=16, help="tokens per request")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="per-slot capacity (0 = fit prompt+tokens)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="physical pool size (0 = full residency)")
+    ap.add_argument("--head", default="midx", choices=("midx", "full"))
+    ap.add_argument("--num-candidates", type=int, default=0,
+                    help="MIDX decode candidates (0 = cfg.head default)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = cfg.head default)")
+    ap.add_argument("--window", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None,
+                    help="restore params+index from a serving checkpoint dir")
+    ap.add_argument("--verify", type=int, default=2,
+                    help="replay N requests solo and require identical output")
+    ap.add_argument("--warmup", type=int, default=1,
+                    help="run a compile-absorbing warmup first so reported "
+                         "latency percentiles are steady-state (0 disables)")
     args = ap.parse_args()
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    out = serve(cfg, batch=args.batch, prompt_len=args.prompt,
-                gen_tokens=args.tokens, head=args.head)
-    print("[serve] sample output ids:", out[0, : args.prompt + 8].tolist())
+    head_kw = {}
+    if args.num_candidates:
+        head_kw["decode_candidates"] = args.num_candidates
+    if args.temperature:
+        head_kw["decode_temperature"] = args.temperature
+    if head_kw:
+        cfg = cfg.with_head(**head_kw)
+    max_seq = args.max_seq or pad_to(args.prompt + args.tokens + 1,
+                                     args.page_size)
+    cfg = cfg.with_serve(max_slots=args.max_slots, page_size=args.page_size,
+                         max_seq=max_seq, num_pages=args.num_pages)
+    window = args.window or None
+
+    if args.ckpt:
+        engine = Engine.from_checkpoint(cfg, args.ckpt, head=args.head,
+                                        window=window)
+    else:
+        engine = Engine(cfg, init_key=jax.random.PRNGKey(args.seed),
+                        head=args.head, window=window)
+
+    reqs = synthetic_requests(cfg, num=args.requests, prompt=args.prompt,
+                              max_new=args.tokens, rate=args.rate,
+                              seed=args.seed)
+    if not reqs:
+        print("[serve] no requests to run")
+        return
+    if args.warmup:
+        # reported percentiles then describe steady-state serving
+        engine.warmup(prompt_buckets(args.prompt))
+    results = engine.run(reqs)
+    s = engine.stats.summary()
+    print(f"[serve] head={args.head} arch={cfg.name} requests={args.requests} "
+          f"slots={args.max_slots} waves={s['waves']} generated={s['generated']} "
+          f"tok/s={s['tok_s']} p50={s['p50_ms']}ms p95={s['p95_ms']}ms "
+          f"p99={s['p99_ms']}ms")
+    if s["waves"] < 2 and args.requests > args.max_slots:
+        print("[serve] WARNING: expected >=2 admission waves", file=sys.stderr)
+
+    n_verify = min(args.verify, len(reqs))
+    if n_verify:
+        bad = 0
+        for r in reqs[:n_verify]:
+            solo = engine.replay_single(r)
+            if not np.array_equal(results[r.rid].tokens, solo):
+                bad += 1
+                print(f"[serve] VERIFY FAILED rid={r.rid}: batched != solo",
+                      file=sys.stderr)
+        print(f"[serve] verify {n_verify - bad}/{n_verify} requests: "
+              f"batched == solo")
+        if bad:
+            raise SystemExit(1)
+    rid0 = reqs[0].rid
+    print("[serve] sample output ids:", results[rid0].tokens[:8].tolist())
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Optional
 
@@ -22,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointManager, save_serving_state
 from repro.configs import get_config
 from repro.data import ZipfLM, make_lm_stream
 from repro.launch import steps as steps_mod
@@ -162,6 +163,10 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
     if ckpt is not None:
         ckpt.save(steps, (params, opt_state, index),
                   metadata={"next_step": steps})
+        # serving export: {"params","index"} only (no opt state) — what
+        # `serve.Engine.from_checkpoint` restores (DESIGN §5)
+        save_serving_state(os.path.join(ckpt_dir, "serve"), steps, params,
+                           index, metadata={"arch": cfg.name})
     return params, opt_state, index, history
 
 

@@ -1,4 +1,6 @@
 from repro.models.model import (init_params, forward, logits_full,
                                 class_embeddings)
-from repro.models.decode import init_decode_state, decode_step
+from repro.models.decode import (init_decode_state, decode_step, prefill,
+                                 init_paged_state, paged_decode_step,
+                                 reset_slot, write_prefill)
 from repro.models import heads

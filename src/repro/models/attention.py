@@ -271,7 +271,9 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None):
-    """Single-token decode. q [B,1,H,hd]; caches [B,Smax,KV,hd]; pos scalar.
+    """Single-token decode. q [B,1,H,hd]; caches [B,Smax,KV,hd]; pos is a
+    scalar or a per-slot [B] vector (slot-packed continuous batching,
+    DESIGN §5 — each serving slot decodes at its own position).
 
     Masks cache entries beyond `pos` (and outside the sliding window).
     """
@@ -281,10 +283,11 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None):
     qg = q.reshape(b, 1, kv, g, hd).astype(jnp.float32) * hd ** -0.5
     scores = jnp.einsum("bqkgh,bmkh->bkgqm", qg, k_cache.astype(jnp.float32))
     j = jnp.arange(smax)
-    ok = j <= pos
+    pos_col = jnp.reshape(jnp.asarray(pos), (-1, 1))       # [B,1] or [1,1]
+    ok = j[None, :] <= pos_col
     if window is not None:
-        ok &= j > pos - window
-    scores = jnp.where(ok[None, None, None, None, :], scores, NEG_INF)
+        ok &= j[None, :] > pos_col - window
+    scores = jnp.where(ok[:, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqm,bmkh->bqkgh", probs.astype(v_cache.dtype), v_cache)
     return out.reshape(b, 1, h, hd)

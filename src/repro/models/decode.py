@@ -1,12 +1,27 @@
-"""Single-token decode paths with KV caches / SSM states for every family.
+"""Decode paths with KV caches / SSM states for every family.
 
-Cache layout (stacked over layers so the layer scan consumes them as xs and
-emits the updated cache as ys):
+Three entry points (DESIGN §5):
+  decode_step       single-token step on the dense slot-major layout; `pos`
+                    may be a per-slot [B] vector (slot-packed serving).
+  prefill           one batched forward-shaped pass over a whole prompt that
+                    also emits the decode-cache contents — no per-token loop.
+  paged_decode_step decode against the paged KV layout: attention K/V live in
+                    a shared physical page pool indexed by per-slot page
+                    tables (`serve.kv_pool`); everything O(1)-per-slot (SSM
+                    state, hybrid ring, cross-KV) stays slot-major.
+
+Dense cache layout (stacked over layers so the layer scan consumes them as xs
+and emits the updated cache as ys):
   attention:  k/v [L, B, Smax, KV, hd]
   ssm:        conv [L, B, W-1, conv_dim], ssm [L, B, H, N, P]
   hybrid:     ssm states + a ring-buffer cache for the weight-shared attention
-              block: [A, B, Wring, KV, hd] (A = #applications) + slot positions
+              block: [A, B, Wring, KV, hd] (A = #applications) + per-slot
+              slot positions [B, Wring]
   vlm/audio:  self cache + precomputed read-only cross K/V
+
+Paged layout (init_paged_state): identical except attention k/v become
+  k/v [L, P, page, KV, hd] + page_table [B, pages_per_slot] int32,
+with physical page 0 reserved as a trash page for inactive slots.
 """
 from __future__ import annotations
 
@@ -14,6 +29,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn_mod
@@ -75,7 +91,9 @@ def init_decode_state(cfg: ModelConfig, params: dict, bsz: int, max_seq: int,
         kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         state["shared_k"] = jnp.zeros((napps, bsz, wring, kvh, hd), _cache_dtype(cfg))
         state["shared_v"] = jnp.zeros((napps, bsz, wring, kvh, hd), _cache_dtype(cfg))
-        state["slot_pos"] = jnp.full((wring,), -1, jnp.int32)
+        # per-slot ring positions: slots in a packed serving batch sit at
+        # different absolute positions (DESIGN §5)
+        state["slot_pos"] = jnp.full((bsz, wring), -1, jnp.int32)
     if cfg.family == "vlm":
         xk, xv = _cross_kv(
             cfg, params["cross_blocks"]["xattn"],
@@ -88,16 +106,31 @@ def init_decode_state(cfg: ModelConfig, params: dict, bsz: int, max_seq: int,
     return state
 
 
-def _self_attn_decode(cfg, bp, x, kc, vc, pos, cos, sin, window=None):
-    """x [B,1,D]; kc/vc [B,Smax,KV,hd]. Returns (x', kc', vc')."""
+def _pos_vec(pos, bsz: int) -> jax.Array:
+    """Normalize a scalar or per-slot position argument to a [B] vector."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.full((bsz,), pos, jnp.int32)
+    return pos
+
+
+def _self_attn_decode(cfg, bp, x, kc, vc, pos, cos, sin, window=None,
+                      attn_fn=None):
+    """x [B,1,D]; kc/vc [B,Smax,KV,hd]; pos [B]. Returns (x', kc', vc').
+
+    `attn_fn(q, kc, vc, pos, window=...)` overrides the local
+    `decode_attention` — the hook the serving engine uses to plug in
+    `dist.decode.flash_decode_seq_sharded` at long context (DESIGN §5).
+    """
     h = apply_norm(bp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
     q, k, v = attn_mod.project_qkv(bp["attn"], h, cfg.num_heads,
                                    cfg.num_kv_heads, cfg.resolved_head_dim,
                                    cos, sin, cfg.qk_norm, cfg.norm_eps)
-    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
-    o = attn_mod.decode_attention(q, kc, vc, pos, window=window)
     b = x.shape[0]
+    rows = jnp.arange(b)
+    kc = kc.at[rows, pos].set(k[:, 0].astype(kc.dtype))
+    vc = vc.at[rows, pos].set(v[:, 0].astype(vc.dtype))
+    o = (attn_fn or attn_mod.decode_attention)(q, kc, vc, pos, window=window)
     x = x + o.reshape(b, 1, -1) @ bp["attn"]["wo"].astype(x.dtype)
     return x, kc, vc
 
@@ -129,12 +162,19 @@ def _mamba_decode(cfg, bp, x, mstate):
 
 
 def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos,
-                state: dict, *, window: Optional[int] = None):
-    """token [B] int32, pos scalar int32 -> (hidden [B,D], new state)."""
+                state: dict, *, window: Optional[int] = None, attn_fn=None):
+    """token [B] int32, pos scalar int32 or per-slot [B] int32 vector
+    -> (hidden [B,D], new state).
+
+    A vector `pos` is the slot-packed serving form (DESIGN §5): slot b
+    writes its cache at its own position pos[b] and attends only to its own
+    prefix — batch composition never changes a slot's arithmetic.
+    """
     dtype = _cache_dtype(cfg)
     x = params["embed"][token][:, None, :].astype(dtype)      # [B,1,D]
     hd = cfg.resolved_head_dim
-    positions = jnp.full((x.shape[0], 1), pos)
+    pos = _pos_vec(pos, x.shape[0])
+    positions = pos[:, None]
     cos, sin = rope_angles(positions, hd, cfg.rope_theta)
     layer_idx = jnp.arange(cfg.num_layers)
 
@@ -143,7 +183,7 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos,
             x = carry
             bp, kc, vc, _ = inp
             x, kc, vc = _self_attn_decode(cfg, bp, x, kc, vc, pos, cos, sin,
-                                          window)
+                                          window, attn_fn)
             x, _ = model_mod._apply_ffn_part(cfg, bp, x)
             return x, (kc, vc)
 
@@ -168,8 +208,9 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos,
         sp = params["shared_attn"]
         every = cfg.hybrid_attn_every
         wring = state["shared_k"].shape[2]
-        slot = pos % wring
-        new_slot_pos = state["slot_pos"].at[slot].set(pos)
+        slot = pos % wring                                     # [B]
+        rows = jnp.arange(x.shape[0])
+        new_slot_pos = state["slot_pos"].at[rows, slot].set(pos)  # [B, Wring]
 
         def shared_apply(x, app_idx, sk_all, sv_all):
             sk = jax.lax.dynamic_index_in_dim(sk_all, app_idx, 0, keepdims=False)
@@ -177,20 +218,19 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos,
             h = apply_norm(sp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
             q, k, v = attn_mod.project_qkv(sp["attn"], h, cfg.num_heads,
                                            cfg.num_kv_heads, hd, cos, sin)
-            sk = jax.lax.dynamic_update_slice_in_dim(sk, k.astype(sk.dtype),
-                                                     slot, axis=1)
-            sv = jax.lax.dynamic_update_slice_in_dim(sv, v.astype(sv.dtype),
-                                                     slot, axis=1)
-            # ring-buffer attention: mask slots by stored absolute position
+            sk = sk.at[rows, slot].set(k[:, 0].astype(sk.dtype))
+            sv = sv.at[rows, slot].set(v[:, 0].astype(sv.dtype))
+            # ring-buffer attention: mask ring entries by each slot's own
+            # stored absolute positions
             b = x.shape[0]
             kvh = cfg.num_kv_heads
             g = cfg.num_heads // kvh
             qg = q.reshape(b, 1, kvh, g, hd).astype(jnp.float32) * hd ** -0.5
             scores = jnp.einsum("bqkgh,bmkh->bkgqm", qg, sk.astype(jnp.float32))
-            ok = (new_slot_pos >= 0) & (new_slot_pos <= pos)
+            ok = (new_slot_pos >= 0) & (new_slot_pos <= pos[:, None])
             if window is not None:
-                ok &= new_slot_pos > pos - window
-            scores = jnp.where(ok[None, None, None, None, :], scores, -1e30)
+                ok &= new_slot_pos > pos[:, None] - window
+            scores = jnp.where(ok[:, None, None, None, :], scores, -1e30)
             probs = jax.nn.softmax(scores, axis=-1)
             o = jnp.einsum("bkgqm,bmkh->bqkgh", probs.astype(sv.dtype), sv)
             x = x + o.reshape(b, 1, -1) @ sp["attn"]["wo"].astype(x.dtype)
@@ -227,7 +267,8 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos,
         def body(carry, inp):
             x = carry
             bp, kc, vc, li = inp
-            x, kc, vc = _self_attn_decode(cfg, bp, x, kc, vc, pos, cos, sin)
+            x, kc, vc = _self_attn_decode(cfg, bp, x, kc, vc, pos, cos, sin,
+                                          attn_fn=attn_fn)
             x, _ = model_mod._apply_ffn_part(cfg, bp, x)
 
             def with_cross(x):
@@ -249,7 +290,8 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos,
         def body(carry, inp):
             x = carry
             bp, kc, vc, xk, xv = inp
-            x, kc, vc = _self_attn_decode(cfg, bp, x, kc, vc, pos, cos, sin)
+            x, kc, vc = _self_attn_decode(cfg, bp, x, kc, vc, pos, cos, sin,
+                                          attn_fn=attn_fn)
             x = _cross_attn_decode(cfg, bp, x, xk, xv)
             x, _ = model_mod._apply_ffn_part(cfg, bp, x)
             return x, (kc, vc)
@@ -263,3 +305,307 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos,
 
     x = apply_norm(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
     return x[:, 0, :], state
+
+
+# ===========================================================================
+# batched prefill (DESIGN §5)
+# ===========================================================================
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            window: Optional[int] = None,
+            image_emb: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None):
+    """One batched forward-shaped pass that also emits decode-cache contents.
+
+    tokens [B,S] -> (hidden [B,S,D] final-normed, cache dict):
+      attn families: k/v [L,B,S,KV,hd]
+      ssm families:  conv_* [L,B,W-1,*], ssm [L,B,H,N,P] (post-prompt carry)
+      hybrid:        + shared_k/v [A,B,S,KV,hd] raw per-application K/V
+                     (`write_prefill` packs the ring)
+      vlm/audio:     + cross_k/v exactly as `init_decode_state` builds them
+
+    Replaces the per-token Python-loop prefill: the whole prompt is consumed
+    in a single call, with the same op order as `forward` (numerics match).
+    """
+    b, s = tokens.shape
+    dtype = _cache_dtype(cfg)
+    x = params["embed"][tokens].astype(dtype)
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        cos = sin = None
+    else:
+        cos, sin = rope_angles(jnp.arange(s), hd, cfg.rope_theta)
+    layer_idx = jnp.arange(cfg.num_layers)
+    # SSD scan needs chunk | S; fall back to one quadratic chunk otherwise
+    # (prompts are short relative to training sequences)
+    chunk = cfg.ssm_chunk if cfg.ssm_chunk and s % cfg.ssm_chunk == 0 else s
+    cache: dict = {}
+
+    def self_attn(bp, x, win=None):
+        h = apply_norm(bp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
+        q, k, v = attn_mod.project_qkv(bp["attn"], h, cfg.num_heads,
+                                       cfg.num_kv_heads, hd, cos, sin,
+                                       cfg.qk_norm, cfg.norm_eps)
+        o = attn_mod.attention(q, k, v, causal=True, window=win)
+        x = x + o.reshape(b, s, -1) @ bp["attn"]["wo"].astype(x.dtype)
+        return x, k.astype(dtype), v.astype(dtype)
+
+    def mamba(bp, x):
+        h = apply_norm(bp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
+        y, mst = mamba_mod.apply_mamba2(
+            bp["mamba"], h, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+            expand=cfg.ssm_expand, chunk=chunk, return_state=True)
+        return x + y, mst
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, inp):
+            bp, _ = inp
+            x, k, v = self_attn(bp, x, window)
+            x, _ = model_mod._apply_ffn_part(cfg, bp, x)
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], layer_idx))
+        cache["k"], cache["v"] = ks, vs
+
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            bp, _ = inp
+            x, mst = mamba(bp, x)
+            return x, mst
+
+        x, mstates = jax.lax.scan(body, x, (params["blocks"], layer_idx))
+        cache.update(mstates)
+
+    elif cfg.family == "hybrid":
+        sp = params["shared_attn"]
+        every = cfg.hybrid_attn_every
+        kvh = cfg.num_kv_heads
+
+        def body(x, inp):
+            bp, li = inp
+            x, mst = mamba(bp, x)
+
+            def with_shared(x):
+                h = apply_norm(sp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
+                q, k, v = attn_mod.project_qkv(sp["attn"], h, cfg.num_heads,
+                                               kvh, hd, cos, sin)
+                o = attn_mod.attention(q, k, v, causal=True, window=window)
+                x = x + o.reshape(b, s, -1) @ sp["attn"]["wo"].astype(x.dtype)
+                h2 = apply_norm(sp["ln2"], x, eps=cfg.norm_eps, kind=cfg.norm)
+                x = x + apply_mlp(sp["mlp"], h2, cfg.act)
+                return x, k.astype(dtype), v.astype(dtype)
+
+            def without(x):
+                z = jnp.zeros((b, s, kvh, hd), dtype)
+                return x, z, z
+
+            x, k, v = jax.lax.cond(li % every == every - 1, with_shared,
+                                   without, x)
+            return x, (mst, k, v)
+
+        x, (mstates, ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], layer_idx))
+        cache.update(mstates)
+        napps = max(1, cfg.num_layers // every)
+        app_layers = np.arange(napps) * every + every - 1
+        cache["shared_k"], cache["shared_v"] = ks[app_layers], vs[app_layers]
+
+    elif cfg.family == "vlm":
+        cbs = params["cross_blocks"]
+        every = cfg.cross_attn_every
+
+        def body(x, inp):
+            bp, li = inp
+            x, k, v = self_attn(bp, x)
+            x, _ = model_mod._apply_ffn_part(cfg, bp, x)
+
+            def with_cross(x):
+                cb = jax.tree_util.tree_map(
+                    lambda p: jax.lax.dynamic_index_in_dim(
+                        p, li // every, axis=0, keepdims=False), cbs)
+                return model_mod._apply_cross_part(
+                    cfg, cb, x, image_emb.astype(x.dtype), gated=True)
+
+            x = jax.lax.cond(li % every == every - 1, with_cross,
+                             lambda x: x, x)
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], layer_idx))
+        cache["k"], cache["v"] = ks, vs
+        xk, xv = _cross_kv(cfg, params["cross_blocks"]["xattn"],
+                           image_emb.astype(dtype))
+        cache["cross_k"], cache["cross_v"] = xk, xv
+
+    elif cfg.family == "audio":
+        enc_out = model_mod._encode(cfg, params["encoder"], frames)
+
+        def body(x, inp):
+            bp, _ = inp
+            x, k, v = self_attn(bp, x)
+            x = model_mod._apply_cross_part(cfg, bp, x, enc_out)
+            x, _ = model_mod._apply_ffn_part(cfg, bp, x)
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], layer_idx))
+        cache["k"], cache["v"] = ks, vs
+        xk, xv = _cross_kv(cfg, params["blocks"]["xattn"], enc_out)
+        cache["cross_k"], cache["cross_v"] = xk, xv
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
+    return x, cache
+
+
+# ===========================================================================
+# paged cache layout (DESIGN §5)
+# ===========================================================================
+
+def init_paged_state(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int, pages_per_slot: int, *,
+                     window: Optional[int] = None) -> dict:
+    """Paged serving state: attention K/V live in a shared physical page pool
+    `[L, P, page, KV, hd]` addressed through per-slot page tables
+    `[num_slots, pages_per_slot]`; O(1)-per-slot state (SSM carries, hybrid
+    ring, cross-KV placeholders) stays slot-major. Physical page 0 is the
+    reserved trash page (`serve.kv_pool.PagePool` never allocates it);
+    unallocated / inactive page-table entries point at it.
+    """
+    state: dict = {}
+    dt = _cache_dtype(cfg)
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    max_seq = pages_per_slot * page_size
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        shape = (cfg.num_layers, num_pages, page_size, kvh, hd)
+        state["k"] = jnp.zeros(shape, dt)
+        state["v"] = jnp.zeros(shape, dt)
+        state["page_table"] = jnp.zeros((num_slots, pages_per_slot), jnp.int32)
+    if cfg.family in ("ssm", "hybrid"):
+        state.update(_ssm_cache(cfg, cfg.num_layers, num_slots))
+    if cfg.family == "hybrid":
+        napps = max(1, cfg.num_layers // cfg.hybrid_attn_every)
+        wring = min(max_seq, window or max_seq)
+        state["shared_k"] = jnp.zeros((napps, num_slots, wring, kvh, hd), dt)
+        state["shared_v"] = jnp.zeros((napps, num_slots, wring, kvh, hd), dt)
+        state["slot_pos"] = jnp.full((num_slots, wring), -1, jnp.int32)
+    if cfg.family == "vlm":
+        shape = (cfg.num_layers, num_slots, cfg.num_image_tokens, kvh, hd)
+        state["cross_k"] = jnp.zeros(shape, dt)
+        state["cross_v"] = jnp.zeros(shape, dt)
+    if cfg.family == "audio":
+        shape = (cfg.num_layers, num_slots, cfg.encoder_seq, kvh, hd)
+        state["cross_k"] = jnp.zeros(shape, dt)
+        state["cross_v"] = jnp.zeros(shape, dt)
+    return state
+
+
+def paged_decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos,
+                      state: dict, *, window: Optional[int] = None,
+                      attn_fn=None):
+    """`decode_step` against the paged layout. pos: scalar or per-slot [B].
+
+    Each step gathers every slot's pages into a logically-contiguous
+    [L,B,Smax,KV,hd] view, runs the dense step, and scatters only the one
+    written (page, offset) row per slot back into the pool — the XLA stand-in
+    for an in-kernel paged-attention gather (DESIGN §5). Families with no
+    attention K/V (ssm) or a fixed-size ring (hybrid) pass straight through.
+    """
+    b = token.shape[0]
+    pos = _pos_vec(pos, b)
+    if "page_table" not in state:
+        return decode_step(cfg, params, token, pos, state, window=window,
+                           attn_fn=attn_fn)
+    pt = state["page_table"]                     # [B, np]
+    pool_k, pool_v = state["k"], state["v"]      # [L, P, page, KV, hd]
+    l, _, page, kvh, hd = pool_k.shape
+    npages = pt.shape[1]
+
+    def view(pool):
+        return pool[:, pt].reshape(l, b, npages * page, kvh, hd)
+
+    inner = {n: x for n, x in state.items() if n not in ("k", "v", "page_table")}
+    inner["k"], inner["v"] = view(pool_k), view(pool_v)
+    hidden, new = decode_step(cfg, params, token, pos, inner, window=window,
+                              attn_fn=attn_fn)
+    rows = jnp.arange(b)
+    phys, off = pt[rows, pos // page], pos % page
+    out = {n: x for n, x in new.items() if n not in ("k", "v")}
+    # inactive slots write (trash page, offset 0) — never readable
+    out["k"] = pool_k.at[:, phys, off].set(new["k"][:, rows, pos])
+    out["v"] = pool_v.at[:, phys, off].set(new["v"][:, rows, pos])
+    out["page_table"] = pt
+    return hidden, out
+
+
+def reset_slot(state: dict, slot) -> dict:
+    """Clear slot `slot`'s per-slot cache entries so a recycled serving slot
+    cannot leak the previous request's state (DESIGN §5). Paged K/V pages are
+    reclaimed by the pool allocator rather than zeroed — stale page contents
+    are unreachable because attention masks everything beyond the new
+    request's own writes; the slot's page table is pointed back at the trash
+    page until the next admission.
+    """
+    out = dict(state)
+    for name in ("conv_x", "conv_b", "conv_c", "ssm", "shared_k", "shared_v",
+                 "cross_k", "cross_v"):
+        if name in state:
+            out[name] = state[name].at[:, slot].set(0)
+    if "slot_pos" in state:
+        out["slot_pos"] = state["slot_pos"].at[slot].set(-1)
+    if "page_table" in state:
+        out["page_table"] = state["page_table"].at[slot].set(0)
+    elif "k" in state:
+        out["k"] = state["k"].at[:, slot].set(0)
+        out["v"] = state["v"].at[:, slot].set(0)
+    return out
+
+
+def write_prefill(cfg: ModelConfig, state: dict, cache: dict, slots, *,
+                  plen: int) -> dict:
+    """Write `prefill` cache pieces for slot ids `slots` ([G] int) into a
+    paged (or dense slot-major) state. `plen` is the static prompt length of
+    this admission group; paged states must already have pages allocated in
+    rows `slots` of the page table (`serve.kv_pool.PagePool.alloc`).
+    """
+    out = dict(state)
+    slots = jnp.asarray(slots, jnp.int32)
+    if "k" in cache:
+        if "page_table" in state:
+            page = state["k"].shape[2]
+            npages = -(-plen // page)
+            pt = state["page_table"][slots, :npages]          # [G, npages]
+            pad = npages * page - plen
+
+            def scatter(pool, raw):
+                raw = raw.astype(pool.dtype)
+                raw = jnp.pad(raw, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                l, g = raw.shape[:2]
+                raw = raw.reshape(l, g, npages, page, *raw.shape[3:])
+                return pool.at[:, pt].set(raw)
+
+            out["k"] = scatter(state["k"], cache["k"])
+            out["v"] = scatter(state["v"], cache["v"])
+        else:
+            out["k"] = state["k"].at[:, slots, :plen].set(
+                cache["k"].astype(state["k"].dtype))
+            out["v"] = state["v"].at[:, slots, :plen].set(
+                cache["v"].astype(state["v"].dtype))
+    for name in ("conv_x", "conv_b", "conv_c", "ssm", "cross_k", "cross_v"):
+        if name in cache:
+            out[name] = state[name].at[:, slots].set(
+                cache[name].astype(state[name].dtype))
+    if "shared_k" in cache:
+        # pack the last min(plen, Wring) prompt positions into ring slots
+        wring = state["shared_k"].shape[2]
+        w_eff = min(plen, wring)
+        p_range = np.arange(plen - w_eff, plen)
+        ring_idx = p_range % wring
+        for name in ("shared_k", "shared_v"):
+            out[name] = state[name].at[:, slots[:, None], ring_idx[None, :]].set(
+                cache[name][:, :, p_range].astype(state[name].dtype))
+        g = slots.shape[0]
+        row = jnp.full((g, wring), -1, jnp.int32)
+        row = row.at[:, ring_idx].set(
+            jnp.broadcast_to(jnp.asarray(p_range, jnp.int32), (g, w_eff)))
+        out["slot_pos"] = state["slot_pos"].at[slots].set(row)
+    return out

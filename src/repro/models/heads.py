@@ -129,17 +129,27 @@ class MidxDecodeOut(NamedTuple):
 
 def midx_decode_head(cfg: ModelConfig, params: dict, index: MultiIndex,
                      hidden: jax.Array, key: jax.Array,
-                     num_candidates: int = 64,
-                     temperature: float = 1.0, *,
+                     num_candidates: Optional[int] = None,
+                     temperature: Optional[float] = None, *,
                      fused: Optional[bool] = None,
                      interpret: bool = False) -> MidxDecodeOut:
     """Approximate next-token sampling without the [B,V] logits matrix.
 
-    Draw `num_candidates` via MIDX, rescore exactly (o_i), softmax over the
-    candidate set with IS correction — O(K² + M·D) per token (beyond-paper).
-    On the fused path the candidate scoring runs the midx_probs kernel
-    through the same `tables_fn` hook as training.
+    Draw `num_candidates` via the two-stage MIDX form (k1 then k2 — same
+    proposal distribution as the K²-table form but O(K) Gumbels per draw,
+    which is what makes it the serving hot path, DESIGN §5), rescore exactly
+    (o_i), softmax over the candidate set with IS correction — O(K·M + M·D)
+    per token (beyond-paper). On the fused path the candidate scoring runs
+    the midx_probs kernel through the same `tables_fn` hook as training.
+
+    `num_candidates` / `temperature` default to
+    `cfg.head.decode_candidates` / `cfg.head.decode_temperature` — the knobs
+    the serve CLI plumbs through (DESIGN §5).
     """
+    if num_candidates is None:
+        num_candidates = cfg.head.decode_candidates
+    if temperature is None:
+        temperature = cfg.head.decode_temperature
     table = class_embeddings(cfg, params)
     h = hidden.astype(jnp.float32)
     k_draw, k_pick = jax.random.split(key)
@@ -147,8 +157,8 @@ def midx_decode_head(cfg: ModelConfig, params: dict, index: MultiIndex,
     tables_fn = (kd.midx_tables_fn(use_kernel=True, interpret=interpret)
                  if kd.fused_head_active(cfg.head, fused=fused,
                                          interpret=interpret) else None)
-    draw = midx_mod.sample(index, k_draw, h, num_candidates,
-                           tables_fn=tables_fn)                # [B,M]
+    draw = midx_mod.sample_twostage(index, k_draw, h, num_candidates,
+                                    tables_fn=tables_fn)       # [B,M]
     # cast per gathered row — never the whole [V, D] table (DESIGN §3)
     cand_e = table[draw.ids].astype(jnp.float32)              # [B,M,D]
     logits = jnp.einsum("bd,bmd->bm", h, cand_e) / temperature

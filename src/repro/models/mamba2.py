@@ -63,21 +63,27 @@ def _gated_norm(y, z, scale, eps=1e-5):
 
 
 def apply_mamba2(p, x, *, d_state: int, head_dim: int, expand: int,
-                 chunk: int = 256):
-    """x [B,S,D] -> [B,S,D]."""
+                 chunk: int = 256, return_state: bool = False):
+    """x [B,S,D] -> [B,S,D].
+
+    return_state=True additionally returns the single-step decode carry
+    after consuming the whole sequence — the same pytree
+    `mamba2_decode_state` allocates — so a batched prefill can seed
+    `decode_mamba2` without a per-token Python loop (DESIGN §5).
+    """
     bsz, s, d_model = x.shape
     d_inner = expand * d_model
     nheads = d_inner // head_dim
     dt_ = x.dtype
 
     z = x @ p["z_proj"].astype(dt_)
-    xs = _causal_conv(x @ p["x_proj"].astype(dt_),
-                      p["conv_x"].astype(dt_), p["conv_x_b"].astype(dt_))
-    bmat = _causal_conv(x @ p["b_proj"].astype(dt_),
-                        p["conv_b"].astype(dt_), p["conv_b_b"].astype(dt_)
+    u_x = x @ p["x_proj"].astype(dt_)
+    u_b = x @ p["b_proj"].astype(dt_)
+    u_c = x @ p["c_proj"].astype(dt_)
+    xs = _causal_conv(u_x, p["conv_x"].astype(dt_), p["conv_x_b"].astype(dt_))
+    bmat = _causal_conv(u_b, p["conv_b"].astype(dt_), p["conv_b_b"].astype(dt_)
                         ).astype(jnp.float32)                      # [B,S,N]
-    cmat = _causal_conv(x @ p["c_proj"].astype(dt_),
-                        p["conv_c"].astype(dt_), p["conv_c_b"].astype(dt_)
+    cmat = _causal_conv(u_c, p["conv_c"].astype(dt_), p["conv_c_b"].astype(dt_)
                         ).astype(jnp.float32)                      # [B,S,N]
     dt = jax.nn.softplus((x @ p["dt_proj"].astype(dt_)).astype(jnp.float32)
                          + p["dt_bias"])                           # [B,S,H]
@@ -110,12 +116,25 @@ def apply_mamba2(p, x, *, d_state: int, head_dim: int, expand: int,
         return h_new, y1 + y2
 
     h0 = jnp.zeros((bsz, nheads, d_state, head_dim), jnp.float32)
-    _, y_chunks = jax.lax.scan(chunk_body, h0, (xc, bc, cc, dtc))
+    h_last, y_chunks = jax.lax.scan(chunk_body, h0, (xc, bc, cc, dtc))
     y = jnp.moveaxis(y_chunks, 0, 1).reshape(bsz, s, nheads, head_dim)
     y = y + p["d_skip"][None, None, :, None] * xh
     y = y.reshape(bsz, s, d_inner).astype(dt_)
     y = _gated_norm(y, z, p["norm_scale"])
-    return y @ p["out_proj"].astype(dt_)
+    out = y @ p["out_proj"].astype(dt_)
+    if not return_state:
+        return out
+
+    def hist(u):
+        # decode's `_conv_step` keeps the last W-1 *pre-conv* projected
+        # inputs; left-pad with zeros when the sequence is shorter.
+        w1 = p["conv_x"].shape[0] - 1
+        u = jnp.pad(u, ((0, 0), (max(0, w1 - s), 0), (0, 0)))
+        return u[:, u.shape[1] - w1:]
+
+    state = {"conv_x": hist(u_x), "conv_b": hist(u_b), "conv_c": hist(u_c),
+             "ssm": h_last}
+    return out, state
 
 
 def mamba2_decode_state(bsz: int, d_model: int, *, d_state: int,

@@ -1,0 +1,304 @@
+"""Serving engine: continuous batching around the MIDX decode head (DESIGN §5).
+
+The engine owns:
+  - a paged decode state (`models.decode.init_paged_state`) + its host-side
+    page allocator (`kv_pool.PagePool`);
+  - a FIFO continuous-batching scheduler (`scheduler.Scheduler`);
+  - one jitted slot-packed decode step over all `cfg.serve.max_slots` slots
+    (inactive slots ride along masked, writing only the trash page);
+  - batched prefill: each admission wave is grouped by prompt length and
+    consumed in a single `models.decode.prefill` call per group — no
+    per-token prefill loop;
+  - per-request PRNG streams: the token drawn after consuming position p of
+    request r uses fold_in(fold_in(PRNGKey(seed), r.rid), p), and every slot
+    samples under its own key (vmapped head), so outputs are identical to
+    running the request alone at the same seed regardless of batch
+    composition. This holds for MoE too: expert dispatch is vmapped per
+    batch row (`models.model._apply_ffn_part`), so capacity competition
+    stays within a request. (Within a request, MoE capacity makes a
+    length-S prefill differ from full-sequence forward — an approximation
+    of the family, not of the batching.)
+
+Decode heads: `heads.midx_decode_head` (the paper's sampler applied at serve
+time — candidates drawn through one replicated index shared by all slots,
+rescored exactly) is the default approximate head; `logits_full` is the
+exact [B, V] fallback. For long contexts an `attn_fn` such as
+`dist.decode.flash_decode_seq_sharded` (partially applied over a mesh) plugs
+into the cache attention of every self-attn layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_serving_state, save_serving_state
+from repro.configs.base import ModelConfig
+from repro.models import (heads, init_paged_state, init_params, logits_full,
+                          paged_decode_step, prefill, reset_slot,
+                          write_prefill)
+from repro.serve.kv_pool import PagePool
+from repro.serve.scheduler import Request, Scheduler, SlotState
+from repro.utils import metrics as metrics_mod
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray              # generated ids [max_new]
+    latencies_s: list               # per-token wall latency
+
+
+@dataclasses.dataclass
+class EngineStats:
+    generated: int = 0
+    wall_s: float = 0.0
+    waves: int = 0
+    steps: int = 0
+    latencies_s: list = dataclasses.field(default_factory=list)
+
+    def summary(self) -> dict:
+        out = {"generated": self.generated, "wall_s": round(self.wall_s, 3),
+               "waves": self.waves, "steps": self.steps,
+               "tok_s": round(self.generated / max(self.wall_s, 1e-9), 1)}
+        out.update({k: round(v, 3) for k, v in
+                    metrics_mod.latency_summary(self.latencies_s).items()})
+        return out
+
+
+def _sample_tokens(cfg, params, index, hidden, keys, head: str):
+    """Per-slot next-token draws. hidden [B,D], keys [B] — each slot samples
+    under its own key so draws never depend on batch composition."""
+    if head == "midx":
+        def one(h, k):
+            return heads.midx_decode_head(cfg, params, index, h[None], k).token[0]
+        return jax.vmap(one)(hidden, keys)
+    logits = logits_full(cfg, params, hidden)[:, : cfg.vocab_size]
+    logits = logits / cfg.head.decode_temperature
+    return jax.vmap(
+        lambda k, lg: jax.random.categorical(k, lg).astype(jnp.int32)
+    )(keys, logits)
+
+
+class Engine:
+    """Continuous-batching serving engine over the paged KV pool."""
+
+    def __init__(self, cfg: ModelConfig, params: Optional[dict] = None, *,
+                 index=None, head: str = "midx", window: Optional[int] = None,
+                 attn_fn=None, init_key: Optional[jax.Array] = None):
+        if head not in ("midx", "full"):
+            raise ValueError(head)
+        self.cfg = cfg
+        self.head = head
+        self.window = window
+        self.attn_fn = attn_fn
+        sv = cfg.serve
+        key = init_key if init_key is not None else jax.random.PRNGKey(0)
+        k_init, k_idx = jax.random.split(key)
+        self.params = init_params(cfg, k_init) if params is None else params
+        self.index = index
+        if head == "midx" and self.index is None:
+            self.index = heads.init_head_state(cfg, self.params, k_idx)
+        self.pool = PagePool(sv.resolved_num_pages, sv.page_size,
+                             sv.pages_per_slot, sv.max_slots)
+        self.sched = Scheduler(sv.max_slots, self.pool)
+        self.state = init_paged_state(cfg, sv.max_slots, sv.resolved_num_pages,
+                                      sv.page_size, sv.pages_per_slot,
+                                      window=window)
+        self.stats = EngineStats()
+        # per-slot base PRNG keys, refreshed at admission; the per-step
+        # fold_in(base, pos) happens inside the jitted step so the hot loop
+        # issues no per-slot host dispatches
+        self._base_keys = jnp.zeros((sv.max_slots, 2), jnp.uint32)
+
+        def step_fn(params, index, state, tokens, pos, base_keys, active):
+            hidden, state = paged_decode_step(cfg, params, tokens, pos, state,
+                                              window=window, attn_fn=attn_fn)
+            keys = jax.vmap(jax.random.fold_in)(base_keys, pos)
+            nxt = _sample_tokens(cfg, params, index, hidden, keys, head)
+            return jnp.where(active, nxt, 0), state
+
+        # donate the state: the pool scatter aliases in place instead of
+        # copying the whole KV pool every token
+        self._step = jax.jit(step_fn, donate_argnums=(2,))
+        self._first_token = jax.jit(
+            lambda params, index, hidden, keys:
+            _sample_tokens(cfg, params, index, hidden, keys, head))
+        # compiles once per prompt-length bucket (groups are padded)
+        self._prefill = jax.jit(
+            lambda params, toks, **kw:
+            prefill(cfg, params, toks, window=window, **kw))
+
+    # ------------------------------------------------------------ checkpoints
+    @classmethod
+    def from_checkpoint(cls, cfg: ModelConfig, root: str, *,
+                        step: Optional[int] = None, **kw) -> "Engine":
+        """Restore params + MIDX index saved by `save_checkpoint` (or by
+        `launch.train`'s serving export) and build an engine around them."""
+        like_p = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        like_i = jax.eval_shape(
+            lambda: heads.init_head_state(
+                cfg, init_params(cfg, jax.random.PRNGKey(0)),
+                jax.random.PRNGKey(1)))
+        params, index, _ = restore_serving_state(root, like_p, like_i, step)
+        return cls(cfg, params, index=index, **kw)
+
+    def save_checkpoint(self, root: str, step: int = 0) -> str:
+        return save_serving_state(root, step, self.params, self.index,
+                                  metadata={"arch": self.cfg.name,
+                                            "head": self.head})
+
+    # ------------------------------------------------------------ key streams
+    def _req_key(self, req: Request) -> jax.Array:
+        return jax.random.fold_in(jax.random.PRNGKey(req.seed), req.rid)
+
+    # ------------------------------------------------------------ admission
+    def _prefill_wave(self, admitted: list[SlotState]) -> None:
+        """Prefill newly admitted slots: one batched `prefill` call per
+        prompt-length group, cache written straight into the paged state.
+        First-token latency is charged per group, not per wave."""
+        # pool.alloc already updated the host table; push it to device first
+        # so write_prefill sees the new page rows
+        if "page_table" in self.state:
+            self.state["page_table"] = jnp.asarray(self.pool.table)
+        groups: dict[int, list[SlotState]] = {}
+        for ss in admitted:
+            ss.key = self._req_key(ss.request)
+            self._base_keys = self._base_keys.at[ss.slot].set(ss.key)
+            groups.setdefault(len(ss.request.tokens), []).append(ss)
+        for plen, sss in groups.items():
+            t0 = time.perf_counter()
+            # pad the group to max_slots rows so each prompt-length bucket
+            # compiles exactly once (batch composition never changes a row's
+            # arithmetic, so padding cannot change any request's output)
+            g, b = len(sss), self.cfg.serve.max_slots
+
+            def stack(rows):
+                rows = list(rows) + [rows[0]] * (b - g)
+                return jnp.asarray(np.stack(rows))
+
+            toks = stack([ss.request.tokens for ss in sss])
+            kw = {}
+            if self.cfg.family == "vlm":
+                kw["image_emb"] = stack([ss.request.image_emb for ss in sss])
+            if self.cfg.family == "audio":
+                kw["frames"] = stack([ss.request.frames for ss in sss])
+            hidden, cache = self._prefill(self.params, toks, **kw)
+            # pad the slot list the same way: the padded cache rows duplicate
+            # row 0 bitwise, so writing slot[0] again is a no-op — and every
+            # write_prefill call keeps a fixed shape (no per-group-size
+            # recompiles of its eager scatters)
+            slots = np.asarray([ss.slot for ss in sss] +
+                               [sss[0].slot] * (b - g), np.int32)
+            self.state = write_prefill(self.cfg, self.state, cache, slots,
+                                       plen=plen)
+            keys = stack([jax.random.fold_in(ss.key, plen - 1) for ss in sss])
+            first = np.asarray(self._first_token(
+                self.params, self.index, hidden[:, -1], keys))
+            for ss, tok in zip(sss, first[:g]):
+                ss.out.append(int(tok))
+            dt = time.perf_counter() - t0
+            for ss in sss:            # first-token latency: this group only
+                ss.latencies.append(dt)
+            self.stats.latencies_s.extend(dt for _ in sss)
+        self.stats.generated += len(admitted)
+
+    def warmup(self, prompt_lens) -> None:
+        """Absorb jit compiles — one prefill per prompt-length bucket plus
+        the slot-packed decode step — then reset stats, so subsequent runs
+        report steady-state throughput/latency. Callers pass the same bucket
+        set their traffic draws prompt lengths from."""
+        rng = np.random.default_rng(0)
+        reqs = []
+        for i, plen in enumerate(sorted(set(prompt_lens))):
+            kw = {}
+            if self.cfg.family == "vlm":
+                kw["image_emb"] = 0.1 * rng.standard_normal(
+                    (self.cfg.num_image_tokens, self.cfg.d_model)
+                ).astype(np.float32)
+            if self.cfg.family == "audio":
+                kw["frames"] = 0.1 * rng.standard_normal(
+                    (self.cfg.encoder_seq, self.cfg.d_model)).astype(np.float32)
+            # rids high in the int32 range to stay clear of user rids (and
+            # positive: fold_in takes uint32 data)
+            reqs.append(Request(rid=0x7FFF0000 + i,
+                                tokens=np.zeros(plen, np.int32), max_new=2,
+                                **kw))
+        self.run(reqs)
+        self.stats = EngineStats()
+
+    # ------------------------------------------------------------ main loop
+    def run(self, requests: list[Request]) -> dict[int, RequestResult]:
+        """Drive all requests to completion; open-loop arrivals honored
+        against wall-clock time since `run` started."""
+        for r in requests:
+            self.sched.submit(r)
+        results: dict[int, RequestResult] = {}
+        t_start = time.perf_counter()
+        waves0 = self.sched.waves
+        sv = self.cfg.serve
+        while not self.sched.done:
+            now = time.perf_counter() - t_start
+            admitted = self.sched.admit(now)
+            if admitted:
+                self._prefill_wave(admitted)
+                self._retire(results)   # max_new == 1 finishes at prefill
+                continue
+            if not self.sched.active:
+                nxt = self.sched.next_arrival()
+                if nxt is not None and nxt > now:
+                    time.sleep(min(nxt - now, 0.05))
+                continue
+            # one slot-packed decode step over all slots
+            tokens = np.zeros((sv.max_slots,), np.int32)
+            pos = np.zeros((sv.max_slots,), np.int32)
+            active = np.zeros((sv.max_slots,), bool)
+            for slot, ss in self.sched.active.items():
+                tokens[slot] = ss.out[-1]
+                pos[slot] = ss.pos
+                active[slot] = True
+            t0 = time.perf_counter()
+            nxt, self.state = self._step(
+                self.params, self.index, self.state, jnp.asarray(tokens),
+                jnp.asarray(pos), self._base_keys, jnp.asarray(active))
+            nxt = np.asarray(nxt)
+            dt = time.perf_counter() - t0
+            self.stats.steps += 1
+            for slot, ss in self.sched.active.items():
+                ss.out.append(int(nxt[slot]))
+                ss.pos += 1
+                ss.latencies.append(dt)
+                self.stats.latencies_s.append(dt)
+                self.stats.generated += 1
+            self._retire(results)
+        self.stats.wall_s += time.perf_counter() - t_start
+        self.stats.waves += self.sched.waves - waves0   # this run's waves only
+        return results
+
+    def _retire(self, results: dict[int, RequestResult]) -> None:
+        for slot in [s for s, ss in self.sched.active.items() if ss.done]:
+            ss = self.sched.finish(slot)
+            self.state = reset_slot(self.state, slot)
+            if "page_table" in self.state:
+                self.state["page_table"] = jnp.asarray(self.pool.table)
+            results[ss.request.rid] = RequestResult(
+                ss.request.rid, np.asarray(ss.out, np.int32), ss.latencies)
+
+    # ------------------------------------------------------------ verification
+    def replay_single(self, req: Request) -> np.ndarray:
+        """Run one request alone (1 slot) with the same weights, index and
+        key stream — the reference the batched output must match exactly
+        (DESIGN §5). The solo engine is cached across calls so repeated
+        verification doesn't recompile its prefill/decode programs; reusing
+        its state is safe because a recycled slot's reads are masked to the
+        new request's own writes."""
+        if getattr(self, "_solo", None) is None:
+            self._solo = Engine(self.cfg.with_serve(max_slots=1), self.params,
+                                index=self.index, head=self.head,
+                                window=self.window, attn_fn=self.attn_fn)
+        res = self._solo.run([dataclasses.replace(req, arrival=0.0)])
+        return res[req.rid].tokens

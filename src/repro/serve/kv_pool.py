@@ -1,0 +1,81 @@
+"""Paged KV-cache pool allocator (DESIGN §5).
+
+Host-side bookkeeping for the physical page pool that
+`models.decode.init_paged_state` lays out on device: fixed-size pages of
+`page_size` tokens, a per-slot page table, all-or-nothing alloc at request
+admission and full free at request finish. The device never sees the free
+list — only the `[num_slots, pages_per_slot]` page table, re-uploaded after
+each admission wave.
+"""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+#: Physical page 0 is reserved: never allocated, the target of every
+#: unallocated page-table entry, and the write sink for inactive slots in a
+#: packed decode step. Its contents are garbage by design and never readable
+#: (attention masks everything beyond a slot's own writes).
+TRASH_PAGE = 0
+
+
+class PagePool:
+    """Fixed-size page allocator with per-slot page tables (DESIGN §5).
+
+    Invariants:
+      - page ``TRASH_PAGE`` is never handed out;
+      - a physical page is owned by at most one slot at a time;
+      - ``alloc`` is all-or-nothing for a request's full token budget, so a
+        request can never run out of pages mid-decode;
+      - ``free`` returns every page and points the slot's table back at the
+        trash page.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, pages_per_slot: int,
+                 num_slots: int):
+        if num_pages < 2:
+            raise ValueError("need at least one real page beyond the trash page")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.pages_per_slot = pages_per_slot
+        self.num_slots = num_slots
+        self._free = collections.deque(range(1, num_pages))
+        self._owned: dict[int, list[int]] = {}
+        self.table = np.full((num_slots, pages_per_slot), TRASH_PAGE, np.int32)
+
+    # ------------------------------------------------------------- queries
+    def pages_needed(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def fits(self, num_tokens: int) -> bool:
+        """Could this request *ever* be admitted (slot capacity)?"""
+        return self.pages_needed(num_tokens) <= self.pages_per_slot
+
+    def can_alloc(self, num_tokens: int) -> bool:
+        n = self.pages_needed(num_tokens)
+        return n <= self.pages_per_slot and n <= len(self._free)
+
+    # ------------------------------------------------------------- alloc/free
+    def alloc(self, slot: int, num_tokens: int) -> np.ndarray:
+        """Reserve pages for `num_tokens` total (prompt + generation) in
+        `slot`'s page table. Returns the physical page ids."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already holds pages")
+        if not self.can_alloc(num_tokens):
+            raise ValueError(f"cannot allocate {num_tokens} tokens "
+                             f"({self.free_pages} pages free)")
+        n = self.pages_needed(num_tokens)
+        pages = [self._free.popleft() for _ in range(n)]
+        self._owned[slot] = pages
+        self.table[slot] = TRASH_PAGE
+        self.table[slot, :n] = pages
+        return np.asarray(pages, np.int32)
+
+    def free(self, slot: int) -> None:
+        self._free.extend(self._owned.pop(slot))
+        self.table[slot] = TRASH_PAGE

@@ -1,0 +1,116 @@
+"""Continuous-batching scheduler (DESIGN §5).
+
+FIFO admission into `cfg.serve.max_slots` decode slots, gated by page
+availability in the shared `kv_pool.PagePool`. Admission is strict FIFO (no
+overtaking: a large request at the queue head blocks smaller ones behind it,
+so no request can starve). Finished slots are recycled mid-flight — the
+engine calls `admit` again after every decode step that frees a slot.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.kv_pool import PagePool
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. `seed`/`rid` define the request's private PRNG
+    stream — outputs depend only on (rid, seed, tokens), never on batch
+    composition (DESIGN §5)."""
+    rid: int
+    tokens: np.ndarray              # [plen] int32 prompt
+    max_new: int                    # tokens to generate (incl. first)
+    seed: int = 0
+    arrival: float = 0.0            # open-loop arrival time (s since start)
+    image_emb: Optional[np.ndarray] = None   # vlm: [num_image_tokens, D]
+    frames: Optional[np.ndarray] = None      # audio: [encoder_seq, D]
+
+
+@dataclasses.dataclass
+class SlotState:
+    """A request bound to a decode slot."""
+    slot: int
+    request: Request
+    key: object                     # per-request PRNG key (engine fills in)
+    pos: int                        # next cache write position
+    out: list = dataclasses.field(default_factory=list)
+    latencies: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.request.max_new
+
+
+class Scheduler:
+    """FIFO continuous batching over a fixed slot set + page pool."""
+
+    def __init__(self, num_slots: int, pool: PagePool):
+        self.num_slots = num_slots
+        self.pool = pool
+        self.queue: collections.deque[Request] = collections.deque()
+        self.active: dict[int, SlotState] = {}
+        self._free_slots = sorted(range(num_slots), reverse=True)
+        self.waves = 0              # admission waves (nonempty admits)
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1 "
+                             "(prefill always samples the first token)")
+        need = len(req.tokens) + req.max_new
+        if not self.pool.fits(need):
+            raise ValueError(
+                f"request {req.rid}: {need} tokens exceeds per-slot capacity "
+                f"{self.pool.pages_per_slot * self.pool.page_size}")
+        # must also fit the *total* pool (minus the trash page), or the
+        # request could never be admitted even with every slot idle and the
+        # engine loop would spin forever waiting for pages
+        usable = self.pool.num_pages - 1
+        if self.pool.pages_needed(need) > usable:
+            raise ValueError(
+                f"request {req.rid}: needs {self.pool.pages_needed(need)} "
+                f"pages but the pool only has {usable} usable pages")
+        self.queue.append(req)
+
+    def next_arrival(self) -> Optional[float]:
+        """Arrival time of the queue head — the FIFO admission gate `admit`
+        waits on (not the queue-wide minimum: with out-of-order arrivals the
+        engine must sleep until the *head* arrives, or it would busy-spin)."""
+        return self.queue[0].arrival if self.queue else None
+
+    @property
+    def done(self) -> bool:
+        return not self.queue and not self.active
+
+    # ------------------------------------------------------------- admission
+    def admit(self, now: float = float("inf")) -> list[SlotState]:
+        """Admit arrived queue-head requests while slots and pages last."""
+        admitted = []
+        while self.queue and self._free_slots:
+            req = self.queue[0]
+            if req.arrival > now:
+                break
+            if not self.pool.can_alloc(len(req.tokens) + req.max_new):
+                break               # strict FIFO: wait for pages, no overtaking
+            self.queue.popleft()
+            slot = self._free_slots.pop()
+            self.pool.alloc(slot, len(req.tokens) + req.max_new)
+            ss = SlotState(slot=slot, request=req, key=None,
+                           pos=len(req.tokens))
+            self.active[slot] = ss
+            admitted.append(ss)
+        if admitted:
+            self.waves += 1
+        return admitted
+
+    def finish(self, slot: int) -> SlotState:
+        ss = self.active.pop(slot)
+        self.pool.free(slot)
+        self._free_slots.append(slot)
+        self._free_slots.sort(reverse=True)
+        return ss

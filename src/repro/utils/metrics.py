@@ -32,3 +32,17 @@ def precision_at_k(scores: np.ndarray, label_sets: list[set[int]],
 
 def perplexity(mean_ce: float) -> float:
     return float(np.exp(mean_ce))
+
+
+def percentiles(xs, qs=(50, 95, 99)) -> dict[int, float]:
+    """{q: percentile} over a sample; empty input gives NaNs."""
+    if len(xs) == 0:
+        return {int(q): float("nan") for q in qs}
+    arr = np.asarray(xs, np.float64)
+    return {int(q): float(np.percentile(arr, q)) for q in qs}
+
+
+def latency_summary(latencies_s, qs=(50, 95, 99)) -> dict[str, float]:
+    """Serving-style per-token latency summary in milliseconds (DESIGN §5)."""
+    pct = percentiles(np.asarray(latencies_s, np.float64) * 1e3, qs)
+    return {f"p{q}_ms": v for q, v in pct.items()}

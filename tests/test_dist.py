@@ -72,12 +72,14 @@ def test_flash_decode_seq_sharded_multi_device():
         q = jax.random.normal(key, (B, 1, H, hd))
         k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
         v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
-        pos = jnp.int32(37)
-        ref = decode_attention(q, k, v, pos)
-        with jax.set_mesh(mesh):
-            out = flash_decode_seq_sharded(q, k, v, pos, mesh, axis="model")
-        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                                   atol=1e-4, rtol=1e-3)
+        for pos in (jnp.int32(37),                      # scalar
+                    jnp.array([37, 11], jnp.int32)):    # per-slot (serving)
+            ref = decode_attention(q, k, v, pos)
+            with jax.set_mesh(mesh):
+                out = flash_decode_seq_sharded(q, k, v, pos, mesh,
+                                               axis="model")
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=1e-4, rtol=1e-3)
         print("flash-decode ok")
     """)
 
