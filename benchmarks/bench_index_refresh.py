@@ -1,0 +1,132 @@
+"""index_refresh — rebuild latency + proposal-KL-vs-staleness (DESIGN §8).
+
+Three questions about the index lifecycle:
+
+1. What does a refresh cost?  Rows time the three rebuild paths against a
+   drifted class table at N ∈ {32k, 256k}:
+     full_cold   the seed behaviour — random-init K-means refit
+     full_warm   refit warm-started from the previous codebooks
+     reassign    frozen codebooks, one batched matmul per stage + CSR
+   `derived` carries the speedup over full_cold — the number the
+   drift-triggered policy banks every time drift stays under threshold.
+
+2. What does warm starting buy?  `warm_iters` reports how many Lloyd
+   iterations the warm-started refit needs to reach the cold refit's
+   8-iteration distortion on the drifted table.
+
+3. What does staleness cost?  `kl_staleness_t{t}` walks the class table t
+   random-walk steps away from the index fit and reports
+   KL(softmax ‖ proposal) for the stale index, with the refreshed index's
+   KL in `derived` — the estimator-quality gap a serving hot swap
+   (`Engine.swap_index`) closes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.core import midx
+from repro.index import build, reassign, refresh
+
+
+def _drifted(key, table, sigma):
+    return table + sigma * jax.random.normal(key, table.shape)
+
+
+def _rebuild_rows(n: int, d: int, k: int, iters: int):
+    key = jax.random.PRNGKey(0)
+    table = 0.5 * jax.random.normal(key, (n, d))
+    idx = build(jax.random.fold_in(key, 1), table, kind="rq", k=k,
+                iters=iters, keep_residuals=False)
+    new_table = _drifted(jax.random.fold_in(key, 2), table, 0.02)
+    k_r = jax.random.fold_in(key, 3)
+    repeats = 3 if n >= (1 << 18) else 5
+
+    def cold():
+        return build(k_r, new_table, kind="rq", k=k, iters=iters,
+                     keep_residuals=False)
+
+    def warm():
+        return refresh(idx, k_r, new_table, iters=iters, warm=True)
+
+    def cheap():
+        return reassign(idx, new_table)
+
+    t_cold = timeit(cold, repeats=repeats)
+    t_warm = timeit(warm, repeats=repeats)
+    t_re = timeit(cheap, repeats=repeats)
+    rows = [
+        (f"index_refresh/full_cold_N{n}", t_cold, f"k={k} iters={iters}"),
+        (f"index_refresh/full_warm_N{n}", t_warm,
+         f"speedup_vs_cold={t_cold / t_warm:.2f}x"),
+        (f"index_refresh/reassign_N{n}", t_re,
+         f"speedup_vs_cold={t_cold / t_re:.2f}x"),
+    ]
+
+    # warm-start quality: iterations to reach the cold refit's distortion
+    def distortion(index):
+        from repro.index.quantization import reconstruct
+        recon = reconstruct(index.kind, index.codebook1, index.codebook2,
+                            index.assign1, index.assign2)
+        return float(jnp.mean(jnp.sum((new_table - recon) ** 2, axis=-1)))
+
+    d_cold = distortion(build(k_r, new_table, kind="rq", k=k, iters=iters,
+                              keep_residuals=False))
+    need, d_warm = iters, None
+    for j in range(1, iters + 1):
+        d_warm = distortion(refresh(idx, k_r, new_table, iters=j, warm=True))
+        if d_warm <= d_cold * 1.02:
+            need = j
+            break
+    rows.append((f"index_refresh/warm_iters_N{n}", float(need),
+                 f"cold{iters}_distortion={d_cold:.4f} "
+                 f"warm{need}_distortion={d_warm:.4f}"))
+    return rows
+
+
+def _kl(table, index, key, probes=8) -> float:
+    return float(midx.proposal_kl(index, table, key, probes))
+
+
+def _staleness_rows(n: int, d: int, k: int, iters: int):
+    """Clustered class table whose *cluster centers* random-walk — the
+    training-time picture: classes move coherently, so a stale index keeps
+    sampling from where the clusters used to be."""
+    key = jax.random.PRNGKey(7)
+    c = 64
+    centers = 1.5 * jax.random.normal(key, (c, d))
+    assign = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, c)
+    noise = 0.15 * jax.random.normal(jax.random.fold_in(key, 2), (n, d))
+
+    def table_of(ctr):
+        return ctr[assign] + noise
+
+    idx0 = build(jax.random.fold_in(key, 3), table_of(centers), kind="rq",
+                 k=k, iters=iters, keep_residuals=False)
+    rows = []
+    for t in (1, 2, 4, 8):
+        ctr = centers
+        for s in range(t):
+            ctr = _drifted(jax.random.fold_in(key, 100 + s), ctr, 0.25)
+        cur = table_of(ctr)
+        idx_fresh = refresh(idx0, jax.random.fold_in(key, 200 + t), cur,
+                            iters=iters)
+        k_probe = jax.random.fold_in(key, 300)
+        kl_stale = _kl(cur, idx0, k_probe)
+        kl_fresh = _kl(cur, idx_fresh, k_probe)
+        rows.append((f"index_refresh/kl_staleness_t{t}", 1e4 * kl_stale,
+                     f"kl_stale={kl_stale:.4f} kl_refreshed={kl_fresh:.4f} "
+                     f"gap={kl_stale - kl_fresh:.4f}"))
+    return rows
+
+
+def run(fast: bool = True):
+    rows = []
+    d = 32 if fast else 64
+    k = 32 if fast else 64
+    iters = 8
+    for n in ((1 << 15, 1 << 18) if fast else (1 << 15, 1 << 18, 1 << 20)):
+        rows.extend(_rebuild_rows(n, d, k, iters))
+    rows.extend(_staleness_rows(4096 if fast else 16384, d, 16, iters))
+    return rows

@@ -21,8 +21,20 @@ class HeadConfig:
     midx_k: int = 64              # codewords per codebook
     num_negatives: int = 1024     # M
     proposal: str = "pooled"      # 'per_token' | 'pooled' | 'mixture'
-    refresh_every: int = 100      # steps between index refreshes
+    refresh_every: int = 100      # steps between index refresh events
     kmeans_iters: int = 8
+    # Index lifecycle (repro.index, DESIGN §8):
+    #   refresh_policy 'fixed'  — every event is a full (warm-started) refit;
+    #                  'drift'  — reassign-only rebuild, escalating to the
+    #                             full refit when the drift metric (fraction
+    #                             of reassigned classes OR relative codeword
+    #                             movement) exceeds refresh_drift_threshold.
+    #   refresh_lag    staleness window: the rebuild dispatched at step s is
+    #                  swapped in at step s+lag, overlapping with training
+    #                  (0 = synchronous swap at dispatch).
+    refresh_policy: str = "fixed"
+    refresh_drift_threshold: float = 0.1
+    refresh_lag: int = 0
     learnable_codebooks: bool = False
     mask_collisions: bool = True
     # MIDX decode head (serving): candidates drawn per step and the sampling

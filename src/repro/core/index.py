@@ -1,99 +1,12 @@
-"""Inverted multi-index with a CSR cluster layout (TPU adaptation, DESIGN §3).
+"""Re-export shim: the inverted multi-index moved to `repro.index` (DESIGN §8).
 
-The ragged cluster sets Ω(k1,k2) are stored flat:
-  sorted_ids[N]   class ids sorted by joint cluster c = k1 * K + k2
-  offsets[K²+1]   start offset of each joint cluster in sorted_ids
-  counts[K²]      |Ω(k1,k2)|  (== diff(offsets))
-
-A uniform draw from Ω(c) is  sorted_ids[offsets[c] + randint(counts[c])] —
-one dynamic gather, O(1), jittable. The whole index is a pytree of arrays so
-it can live inside a jitted train step as non-trainable state.
+Kept so existing imports (`repro.core.index`, `from repro.core import build`)
+keep working; new code — and all lifecycle call sites (incremental refresh,
+drift policy, sharded rebuild, serving hot-swap) — should import from
+`repro.index`.
 """
-from __future__ import annotations
+from repro.index.build import (MultiIndex, build, from_quantization,
+                               reassign, refresh, _csr_from_assignments)
 
-import dataclasses
-import functools
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.quantization import Quantization, fit, QuantizerKind
-
-
-@functools.partial(jax.tree_util.register_dataclass,
-                   data_fields=("codebook1", "codebook2", "assign1", "assign2",
-                                "residuals", "sorted_ids", "offsets", "counts",
-                                "log_counts"),
-                   meta_fields=("kind",))
-@dataclasses.dataclass(frozen=True)
-class MultiIndex:
-    kind: str                 # 'pq' | 'rq'
-    codebook1: jax.Array      # [K, D or D/2]
-    codebook2: jax.Array      # [K, D or D/2]
-    assign1: jax.Array        # [N]
-    assign2: jax.Array        # [N]
-    residuals: jax.Array      # [N, D]  (only needed by the *exact* sampler)
-    sorted_ids: jax.Array     # [N] int32
-    offsets: jax.Array        # [K²+1] int32
-    counts: jax.Array         # [K, K] int32  == |Ω|
-    log_counts: jax.Array     # [K, K] float32: log|Ω|, -inf for empty
-
-    @property
-    def num_codewords(self) -> int:
-        return self.codebook1.shape[0]
-
-    @property
-    def num_classes(self) -> int:
-        return self.sorted_ids.shape[0]
-
-    def joint_cluster(self) -> jax.Array:
-        """Joint cluster id per class: k1 * K + k2. [N]"""
-        return self.assign1 * self.num_codewords + self.assign2
-
-
-def _csr_from_assignments(assign1: jax.Array, assign2: jax.Array, k: int):
-    joint = assign1.astype(jnp.int32) * k + assign2.astype(jnp.int32)   # [N]
-    order = jnp.argsort(joint)                                          # stable
-    sorted_ids = order.astype(jnp.int32)
-    counts_flat = jnp.zeros((k * k,), jnp.int32).at[joint].add(1)
-    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(counts_flat)]).astype(jnp.int32)
-    counts = counts_flat.reshape(k, k)
-    log_counts = jnp.where(counts > 0, jnp.log(jnp.maximum(counts, 1).astype(jnp.float32)),
-                           -jnp.inf)
-    return sorted_ids, offsets, counts, log_counts
-
-
-def from_quantization(quant: Quantization) -> MultiIndex:
-    k = quant.num_codewords
-    sorted_ids, offsets, counts, log_counts = _csr_from_assignments(
-        quant.assign1, quant.assign2, k)
-    return MultiIndex(quant.kind, quant.codebook1, quant.codebook2,
-                      quant.assign1, quant.assign2, quant.residuals,
-                      sorted_ids, offsets, counts, log_counts)
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("kind", "k", "iters", "keep_residuals"))
-def build(key: jax.Array, class_embeddings: jax.Array, *, kind: QuantizerKind = "rq",
-          k: int = 32, iters: int = 10, keep_residuals: bool = True) -> MultiIndex:
-    """Fit quantizer + build CSR layout. Called at init and on refresh.
-
-    keep_residuals=False drops the [N, D] residual table (only the *exact*
-    sampler needs it) — at vocab scale it is as large as the embedding table,
-    and the fast sampler state must stay small to be replicated (DESIGN §4).
-    """
-    quant = fit(kind, key, class_embeddings, k, iters)
-    idx = from_quantization(quant)
-    if not keep_residuals:
-        d = class_embeddings.shape[-1]
-        idx = dataclasses.replace(idx, residuals=jnp.zeros((0, d), jnp.float32))
-    return idx
-
-
-def refresh(index: MultiIndex, key: jax.Array, class_embeddings: jax.Array,
-            *, iters: int = 10) -> MultiIndex:
-    """Rebuild the index against updated class embeddings (paper: per epoch)."""
-    return build(key, class_embeddings, kind=index.kind,
-                 k=index.num_codewords, iters=iters,
-                 keep_residuals=index.residuals.shape[0] > 0)
+__all__ = ["MultiIndex", "build", "from_quantization", "reassign", "refresh",
+           "_csr_from_assignments"]

@@ -1,61 +1,8 @@
-"""Lloyd's K-means in pure JAX (matmul-based distances, jittable).
+"""Re-export shim: K-means moved to `repro.index.kmeans` (DESIGN §8).
 
-Used to learn the codebooks of the inverted multi-index (paper §4.1).
-Runs fine sharded: the dominant cost is an [N, D] @ [D, K] matmul.
+Kept so existing imports (`repro.core.kmeans`, `from repro.core import
+kmeans`) keep working; new code should import from `repro.index`.
 """
-from __future__ import annotations
+from repro.index.kmeans import KMeansResult, kmeans, _assign, _update
 
-import functools
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-
-class KMeansResult(NamedTuple):
-    centroids: jax.Array      # [K, D]
-    assignments: jax.Array    # [N] int32
-    distortion: jax.Array     # scalar: mean squared distance to centroid
-
-
-def _assign(x: jax.Array, centroids: jax.Array) -> jax.Array:
-    """Nearest centroid per row. ||x-c||^2 = ||x||^2 - 2 x.c + ||c||^2."""
-    # ||x||^2 constant w.r.t. argmin -> skip it.
-    dots = x @ centroids.T                                  # [N, K]
-    c_sq = jnp.sum(centroids * centroids, axis=-1)          # [K]
-    return jnp.argmin(c_sq[None, :] - 2.0 * dots, axis=-1).astype(jnp.int32)
-
-
-def _update(x: jax.Array, assign: jax.Array, k: int, key: jax.Array) -> jax.Array:
-    """Recompute centroids; re-seed empty clusters with random points."""
-    n = x.shape[0]
-    one_hot = jax.nn.one_hot(assign, k, dtype=x.dtype)      # [N, K]
-    counts = jnp.sum(one_hot, axis=0)                       # [K]
-    sums = one_hot.T @ x                                    # [K, D]
-    centroids = sums / jnp.maximum(counts, 1.0)[:, None]
-    # Empty-cluster repair: place at a random data point.
-    rand_idx = jax.random.randint(key, (k,), 0, n)
-    repair = x[rand_idx]
-    return jnp.where((counts > 0)[:, None], centroids, repair)
-
-
-@functools.partial(jax.jit, static_argnames=("k", "iters"))
-def kmeans(key: jax.Array, x: jax.Array, k: int, iters: int = 10) -> KMeansResult:
-    """Lloyd's algorithm. x: [N, D] float. Returns centroids [K, D]."""
-    n = x.shape[0]
-    init_key, loop_key = jax.random.split(key)
-    init_idx = jax.random.choice(init_key, n, (k,), replace=n < k)
-    centroids0 = x[init_idx]
-
-    def body(carry, key_t):
-        centroids = carry
-        assign = _assign(x, centroids)
-        centroids = _update(x, assign, k, key_t)
-        return centroids, None
-
-    keys = jax.random.split(loop_key, iters)
-    centroids, _ = jax.lax.scan(body, centroids0, keys)
-    assign = _assign(x, centroids)
-    diff = x - centroids[assign]
-    distortion = jnp.mean(jnp.sum(diff * diff, axis=-1))
-    return KMeansResult(centroids, assign, distortion)
+__all__ = ["KMeansResult", "kmeans", "_assign", "_update"]

@@ -261,3 +261,20 @@ def sample_exact(index: MultiIndex, key: jax.Array, z: jax.Array,
                                  shape=(*log_p.shape[:-1], m))
     log_q = jnp.take_along_axis(log_p, ids, axis=-1)
     return Draw(ids.astype(jnp.int32), log_q)
+
+
+def proposal_kl(index: MultiIndex, class_embeddings: jax.Array,
+                key: jax.Array, probes: int = 16,
+                scale: float = 0.5) -> jax.Array:
+    """Mean KL(full softmax ‖ fast-MIDX proposal) over random probe queries.
+
+    The staleness/quality number the index lifecycle moves (DESIGN §8):
+    shared by the serve CLI's stale-vs-refreshed report and the
+    bench_index_refresh KL-vs-staleness curve, so the two surfaces can
+    never drift apart."""
+    z = scale * jax.random.normal(key, (probes, class_embeddings.shape[-1]))
+    log_p = jax.nn.log_softmax(z @ class_embeddings.T.astype(jnp.float32),
+                               axis=-1)
+    ids = jnp.broadcast_to(jnp.arange(class_embeddings.shape[0]), log_p.shape)
+    log_q = log_prob(index, z, ids)
+    return jnp.mean(jnp.sum(jnp.exp(log_p) * (log_p - log_q), axis=-1))

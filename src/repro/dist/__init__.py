@@ -11,12 +11,13 @@ Consumed by launch.steps / launch.train / launch.dryrun and by
 optim.opt_state_specs (ZeRO-1).
 """
 from repro.dist.sharding import (param_specs, zero1_specs, batch_spec,
-                                 index_specs, decode_cache_specs)
-from repro.dist.collectives import psum_bf16, psum_int8_ef
+                                 index_specs, decode_cache_specs,
+                                 refresh_table_spec)
+from repro.dist.collectives import psum_bf16, psum_int8_ef, all_gather_rows
 from repro.dist.decode import flash_decode_seq_sharded
 
 __all__ = [
     "param_specs", "zero1_specs", "batch_spec", "index_specs",
-    "decode_cache_specs", "psum_bf16", "psum_int8_ef",
-    "flash_decode_seq_sharded",
+    "decode_cache_specs", "refresh_table_spec", "psum_bf16", "psum_int8_ef",
+    "all_gather_rows", "flash_decode_seq_sharded",
 ]

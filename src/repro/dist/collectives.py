@@ -68,3 +68,17 @@ def psum_int8_ef(tree: Any, error_feedback: Any, axis_name):
         return (total.astype(jnp.float32) * scale).astype(g.dtype), new_ef
 
     return _map2(one, tree, error_feedback)
+
+
+def all_gather_rows(x: jax.Array, axes) -> jax.Array:
+    """Reassemble a row-sharded array to its global row order (DESIGN §8).
+
+    `axes` is the axis name (or tuple, row-major outer→inner) the leading
+    dimension was sliced over; gathering inner axis first reconstructs the
+    linear shard order. Used by the sharded index rebuild to collect the
+    per-shard class assignments before the replicated CSR rebuild.
+    """
+    names = list(axes) if isinstance(axes, (tuple, list)) else [axes]
+    for a in reversed(names):
+        x = jax.lax.all_gather(x, a, tiled=True)
+    return x

@@ -141,6 +141,24 @@ def index_specs(index_abs):
     return jax.tree_util.tree_map(lambda _: P(), index_abs)
 
 
+def refresh_table_spec(*, padded_vocab: int, dp: int,
+                       data_axes: Sequence[str] = ("data",)) -> P:
+    """Row spec of the class table during a sharded index rebuild (DESIGN §8).
+
+    The refresh step (`launch.steps.make_refresh_step`) slices the [Vpad, D]
+    class table over the data axes so each shard quantizes only its rows —
+    K-means sufficient statistics psum, assignments all-gather, CSR rebuilt
+    replicated (`repro.index.sharded`). Falls back to replicated (P()) when
+    the padded vocab does not divide the data degree, in which case the
+    refresh runs the single-device path on every shard redundantly, exactly
+    as before.
+    """
+    axes = tuple(data_axes)
+    if dp <= 1 or padded_vocab % dp:
+        return P()
+    return P(axes if len(axes) > 1 else axes[0])
+
+
 def decode_cache_specs(cfg, cache_abs, *, tp: int, multi_pod: bool,
                        global_batch: int, dp_degree: int,
                        model_axis: str = "model"):

@@ -1,0 +1,45 @@
+"""repro.index — the index lifecycle subsystem (DESIGN §8).
+
+Promoted out of repro.core so the adaptive half of the paper — keeping the
+inverted multi-index tracking the moving class embeddings — is a first-class
+subsystem with four coordinated layers:
+
+  kmeans / quantization   Lloyd's + PQ/RQ fits, both warm-startable from the
+                          previous codebooks (`init=`).
+  build                   MultiIndex + CSR layout; cold `build`, warm
+                          `refresh`, and the incremental `reassign` that
+                          freezes codebooks and rebuilds assignments/CSR
+                          with one batched matmul per stage.
+  lifecycle               drift metrics, the drift-triggered `refresh_adaptive`
+                          (cfg.head.refresh_policy), and the host-side
+                          `IndexLifecycle` double buffer that overlaps the
+                          rebuild with training (bounded staleness window).
+  sharded                 shard_map rebuild: each data shard quantizes its
+                          row slice of the class table; codebook statistics
+                          psum, assignments all-gather, CSR replicated.
+
+`repro.core.index` / `repro.core.kmeans` / `repro.core.quantization` remain
+as thin re-export shims, so samplers, heads and the kernels keep importing
+the same names.
+"""
+from repro.index.kmeans import KMeansResult, kmeans
+from repro.index.quantization import (Quantization, QuantizerKind,
+                                      assign_against, assign_new, fit,
+                                      fit_pq, fit_rq, query_scores,
+                                      reconstruct)
+from repro.index.build import (MultiIndex, build, from_quantization,
+                               reassign, refresh)
+from repro.index.lifecycle import (REFRESH_POLICIES, IndexLifecycle,
+                                   RefreshEvent, drift_metrics,
+                                   refresh_adaptive, refresh_with_policy)
+from repro.index.sharded import kmeans_sharded, refresh_sharded
+
+__all__ = [
+    "KMeansResult", "kmeans",
+    "Quantization", "QuantizerKind", "assign_against", "assign_new", "fit",
+    "fit_pq", "fit_rq", "query_scores", "reconstruct",
+    "MultiIndex", "build", "from_quantization", "reassign", "refresh",
+    "REFRESH_POLICIES", "IndexLifecycle", "RefreshEvent", "drift_metrics",
+    "refresh_adaptive", "refresh_with_policy",
+    "kmeans_sharded", "refresh_sharded",
+]

@@ -1,0 +1,149 @@
+"""Inverted multi-index with a CSR cluster layout (TPU adaptation, DESIGN §3).
+
+The ragged cluster sets Ω(k1,k2) are stored flat:
+  sorted_ids[N]   class ids sorted by joint cluster c = k1 * K + k2
+  offsets[K²+1]   start offset of each joint cluster in sorted_ids
+  counts[K²]      |Ω(k1,k2)|  (== diff(offsets))
+
+A uniform draw from Ω(c) is  sorted_ids[offsets[c] + randint(counts[c])] —
+one dynamic gather, O(1), jittable. The whole index is a pytree of arrays so
+it can live inside a jitted train step as non-trainable state.
+
+Construction paths (DESIGN §8):
+  build     cold fit (random K-means init) — first build only.
+  refresh   full refit, warm-started from the previous codebooks by default.
+  reassign  freeze codebooks, recompute assignments with one batched matmul
+            per stage + segmented CSR rebuild — the cheap incremental path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.index.quantization import (Quantization, QuantizerKind,
+                                      assign_against, fit, reconstruct)
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("codebook1", "codebook2", "assign1", "assign2",
+                                "residuals", "sorted_ids", "offsets", "counts",
+                                "log_counts"),
+                   meta_fields=("kind",))
+@dataclasses.dataclass(frozen=True)
+class MultiIndex:
+    kind: str                 # 'pq' | 'rq'
+    codebook1: jax.Array      # [K, D or D/2]
+    codebook2: jax.Array      # [K, D or D/2]
+    assign1: jax.Array        # [N]
+    assign2: jax.Array        # [N]
+    residuals: jax.Array      # [N, D]  (only needed by the *exact* sampler)
+    sorted_ids: jax.Array     # [N] int32
+    offsets: jax.Array        # [K²+1] int32
+    counts: jax.Array         # [K, K] int32  == |Ω|
+    log_counts: jax.Array     # [K, K] float32: log|Ω|, -inf for empty
+
+    @property
+    def num_codewords(self) -> int:
+        return self.codebook1.shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.sorted_ids.shape[0]
+
+    @property
+    def has_residuals(self) -> bool:
+        return self.residuals.shape[0] > 0
+
+    def joint_cluster(self) -> jax.Array:
+        """Joint cluster id per class: k1 * K + k2. [N]"""
+        return self.assign1 * self.num_codewords + self.assign2
+
+
+def _csr_from_assignments(assign1: jax.Array, assign2: jax.Array, k: int):
+    joint = assign1.astype(jnp.int32) * k + assign2.astype(jnp.int32)   # [N]
+    order = jnp.argsort(joint)                                          # stable
+    sorted_ids = order.astype(jnp.int32)
+    counts_flat = jnp.zeros((k * k,), jnp.int32).at[joint].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts_flat)]).astype(jnp.int32)
+    counts = counts_flat.reshape(k, k)
+    log_counts = jnp.where(counts > 0, jnp.log(jnp.maximum(counts, 1).astype(jnp.float32)),
+                           -jnp.inf)
+    return sorted_ids, offsets, counts, log_counts
+
+
+def from_quantization(quant: Quantization) -> MultiIndex:
+    k = quant.num_codewords
+    sorted_ids, offsets, counts, log_counts = _csr_from_assignments(
+        quant.assign1, quant.assign2, k)
+    return MultiIndex(quant.kind, quant.codebook1, quant.codebook2,
+                      quant.assign1, quant.assign2, quant.residuals,
+                      sorted_ids, offsets, counts, log_counts)
+
+
+def _build_impl(key, class_embeddings, *, kind, k, iters, keep_residuals,
+                init=None) -> MultiIndex:
+    quant = fit(kind, key, class_embeddings, k, iters, init)
+    idx = from_quantization(quant)
+    if not keep_residuals:
+        d = class_embeddings.shape[-1]
+        idx = dataclasses.replace(idx, residuals=jnp.zeros((0, d), jnp.float32))
+    return idx
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "k", "iters", "keep_residuals"))
+def build(key: jax.Array, class_embeddings: jax.Array, *, kind: QuantizerKind = "rq",
+          k: int = 32, iters: int = 10, keep_residuals: bool = True,
+          init=None) -> MultiIndex:
+    """Fit quantizer + build CSR layout. Called at init and on refresh.
+
+    keep_residuals=False drops the [N, D] residual table (only the *exact*
+    sampler needs it) — at vocab scale it is as large as the embedding table,
+    and the fast sampler state must stay small to be replicated (DESIGN §4).
+
+    init: optional (codebook1, codebook2) warm start for both K-means stages.
+    """
+    return _build_impl(key, class_embeddings, kind=kind, k=k, iters=iters,
+                       keep_residuals=keep_residuals, init=init)
+
+
+def _reassign_impl(index: MultiIndex, class_embeddings: jax.Array) -> MultiIndex:
+    """Frozen-codebook reassign + CSR rebuild (no K-means)."""
+    a1, a2 = assign_against(index.kind, index.codebook1, index.codebook2,
+                            class_embeddings)
+    sorted_ids, offsets, counts, log_counts = _csr_from_assignments(
+        a1, a2, index.num_codewords)
+    if index.has_residuals:
+        recon = reconstruct(index.kind, index.codebook1, index.codebook2,
+                            a1, a2)
+        residuals = class_embeddings - recon
+    else:
+        residuals = index.residuals
+    return MultiIndex(index.kind, index.codebook1, index.codebook2, a1, a2,
+                      residuals, sorted_ids, offsets, counts, log_counts)
+
+
+@jax.jit
+def reassign(index: MultiIndex, class_embeddings: jax.Array) -> MultiIndex:
+    """Incremental refresh: keep the codebooks, recompute `assign1/assign2`
+    against the updated class table (one batched matmul per stage) and
+    rebuild the CSR layout. O(N·K·D) — no Lloyd iterations (DESIGN §8)."""
+    return _reassign_impl(index, class_embeddings)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "warm"))
+def refresh(index: MultiIndex, key: jax.Array, class_embeddings: jax.Array,
+            *, iters: int = 10, warm: bool = True) -> MultiIndex:
+    """Full refit against updated class embeddings (paper: per epoch).
+
+    warm=True (default) seeds both K-means stages from the current codebooks
+    — fewer Lloyd iterations to the same distortion on a drifting table;
+    warm=False reproduces the original cold rebuild."""
+    init = (index.codebook1, index.codebook2) if warm else None
+    return _build_impl(key, class_embeddings, kind=index.kind,
+                       k=index.num_codewords, iters=iters,
+                       keep_residuals=index.has_residuals, init=init)

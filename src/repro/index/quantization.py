@@ -1,0 +1,125 @@
+"""Product / residual quantizers for the inverted multi-index (paper §4.1).
+
+Both produce, for class embeddings q_i in R^D and B=2 codebooks of K codewords:
+  - codebooks: stage-1 and stage-2 codeword matrices
+  - assignments (k1, k2) per class
+  - residual vectors  q~_i = q_i - reconstruction(k1, k2)
+and define how a *query* z is scored against each codebook:
+  PQ: z split into halves, s_l[k] = <z_l, c_l[k]>   (codewords in R^{D/2})
+  RQ: full z against both,  s_l[k] = <z,  c_l[k]>   (codewords in R^D)
+
+The identity that makes Theorem 1 exact is
+  o_i = z^T q_i = s_1[k1(i)] + s_2[k2(i)] + z^T q~_i
+which holds for both quantizers with the conventions above.
+
+`fit_pq` / `fit_rq` take an optional `init=(codebook1, codebook2)` pair to
+warm-start both K-means stages — the index lifecycle's incremental full
+refit (DESIGN §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.index.kmeans import kmeans, _assign
+
+QuantizerKind = Literal["pq", "rq"]
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("codebook1", "codebook2", "assign1", "assign2",
+                                "residuals"),
+                   meta_fields=("kind",))
+@dataclasses.dataclass(frozen=True)
+class Quantization:
+    kind: str                 # 'pq' | 'rq' (static metadata, not traced)
+    codebook1: jax.Array      # PQ: [K, D/2]; RQ: [K, D]
+    codebook2: jax.Array      # PQ: [K, D/2]; RQ: [K, D]
+    assign1: jax.Array        # [N] int32
+    assign2: jax.Array        # [N] int32
+    residuals: jax.Array      # [N, D]
+
+    @property
+    def num_codewords(self) -> int:
+        return self.codebook1.shape[0]
+
+
+def reconstruct(kind: str, codebook1: jax.Array, codebook2: jax.Array,
+                assign1: jax.Array, assign2: jax.Array) -> jax.Array:
+    """Reconstructed class embeddings from codeword assignments."""
+    if kind == "pq":
+        return jnp.concatenate([codebook1[assign1], codebook2[assign2]], axis=-1)
+    return codebook1[assign1] + codebook2[assign2]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def fit_pq(key: jax.Array, q: jax.Array, k: int, iters: int = 10,
+           init: Optional[tuple] = None) -> Quantization:
+    """Product quantization: split D into two halves, k-means each half."""
+    d = q.shape[-1]
+    assert d % 2 == 0, f"PQ with B=2 needs even D, got {d}"
+    k1_key, k2_key = jax.random.split(key)
+    q1, q2 = q[:, : d // 2], q[:, d // 2:]
+    i1, i2 = (None, None) if init is None else init
+    r1 = kmeans(k1_key, q1, k, iters, init=i1)
+    r2 = kmeans(k2_key, q2, k, iters, init=i2)
+    recon = jnp.concatenate([r1.centroids[r1.assignments],
+                             r2.centroids[r2.assignments]], axis=-1)
+    return Quantization("pq", r1.centroids, r2.centroids,
+                        r1.assignments, r2.assignments, q - recon)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def fit_rq(key: jax.Array, q: jax.Array, k: int, iters: int = 10,
+           init: Optional[tuple] = None) -> Quantization:
+    """Residual quantization: k-means on q, then k-means on the residuals."""
+    k1_key, k2_key = jax.random.split(key)
+    i1, i2 = (None, None) if init is None else init
+    r1 = kmeans(k1_key, q, k, iters, init=i1)
+    resid1 = q - r1.centroids[r1.assignments]
+    r2 = kmeans(k2_key, resid1, k, iters, init=i2)
+    recon = r1.centroids[r1.assignments] + r2.centroids[r2.assignments]
+    return Quantization("rq", r1.centroids, r2.centroids,
+                        r1.assignments, r2.assignments, q - recon)
+
+
+def fit(kind: QuantizerKind, key: jax.Array, q: jax.Array, k: int,
+        iters: int = 10, init: Optional[tuple] = None) -> Quantization:
+    if kind == "pq":
+        return fit_pq(key, q, k, iters, init)
+    if kind == "rq":
+        return fit_rq(key, q, k, iters, init)
+    raise ValueError(f"unknown quantizer kind {kind!r}")
+
+
+def assign_against(kind: str, codebook1: jax.Array, codebook2: jax.Array,
+                   q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Assign embeddings to *frozen* codebooks — one batched matmul per
+    stage, no re-fit. The reassign-only refresh path (DESIGN §8)."""
+    if kind == "pq":
+        d = q.shape[-1]
+        a1 = _assign(q[:, : d // 2], codebook1)
+        a2 = _assign(q[:, d // 2:], codebook2)
+    else:
+        a1 = _assign(q, codebook1)
+        a2 = _assign(q - codebook1[a1], codebook2)
+    return a1, a2
+
+
+def assign_new(quant: Quantization, q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Assign new class embeddings to existing codebooks (no re-fit)."""
+    return assign_against(quant.kind, quant.codebook1, quant.codebook2, q)
+
+
+def query_scores(kind: str, codebook1: jax.Array, codebook2: jax.Array,
+                 z: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Codeword scores s1, s2 for queries z [..., D] -> ([..., K], [..., K])."""
+    if kind == "pq":
+        d = z.shape[-1]
+        z1, z2 = z[..., : d // 2], z[..., d // 2:]
+        return z1 @ codebook1.T, z2 @ codebook2.T
+    return z @ codebook1.T, z @ codebook2.T

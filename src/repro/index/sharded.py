@@ -1,0 +1,201 @@
+"""Sharded index rebuild: each data shard quantizes its slice of the class
+table (DESIGN §8).
+
+The cost of a refresh is dominated by the per-stage [N, D] @ [D, K] matmuls
+(K-means E-step or frozen-codebook reassign). On a mesh, every device
+redundantly refitting the whole table wastes dp× compute; here the class
+table is row-sliced over the data axes and the codebook statistics travel
+through collectives instead:
+
+  E-step     local argmin over the shard's rows (no communication)
+  M-step     psum of per-shard (Σ one_hot·x, Σ one_hot) — the K-means
+             sufficient statistics, O(K·D) bytes per iteration
+  repair     empty clusters re-seed from a *globally* indexed random row,
+             fetched with a masked psum so every shard keeps identical
+             codebooks
+  assembly   assignments all-gather back to [N] and the CSR layout is
+             rebuilt replicated (argsort of [N] ints — cheap next to the
+             matmuls)
+
+All functions here run *inside* shard_map over the data axes; the spec
+factory `dist.sharding.refresh_table_spec` says how the table rows split.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.index.build import MultiIndex, _csr_from_assignments
+from repro.index.kmeans import _assign
+from repro.index.lifecycle import REFRESH_POLICIES
+from repro.index.quantization import assign_against
+
+
+def _axis_size(axis) -> int:
+    # psum of a python constant folds to the (concrete) axis size at trace
+    # time — works on jax versions without jax.lax.axis_size
+    return jax.lax.psum(1, axis)
+
+
+def _linear_index(axis) -> jax.Array:
+    if isinstance(axis, (tuple, list)):
+        idx = jnp.int32(0)
+        for a in axis:
+            idx = idx * _axis_size(a) + jax.lax.axis_index(a)
+        return idx
+    return jax.lax.axis_index(axis)
+
+
+def _gather_global_rows(x_local: jax.Array, idx: jax.Array, axis,
+                        shard: jax.Array) -> jax.Array:
+    """Fetch rows of the *global* table by global index: each shard
+    contributes the rows it owns, combined with one psum. [len(idx), D]."""
+    rows = x_local.shape[0]
+    local = idx - shard * rows
+    ok = (local >= 0) & (local < rows)
+    picked = jnp.where(ok[:, None],
+                       x_local[jnp.clip(local, 0, rows - 1)], 0.0)
+    return jax.lax.psum(picked, axis)
+
+
+def kmeans_sharded(key: jax.Array, x_local: jax.Array, k: int, iters: int,
+                   *, axis, init: Optional[jax.Array] = None):
+    """Lloyd's over a row-sharded table. Returns (centroids [K, D] —
+    identical on every shard — local assignments [rows], distortion)."""
+    rows, _d = x_local.shape
+    dp = _axis_size(axis)
+    shard = _linear_index(axis)
+    n_global = rows * dp
+    init_key, loop_key = jax.random.split(key)
+    if init is None:
+        init_idx = jax.random.choice(init_key, n_global, (k,),
+                                     replace=n_global < k)
+        centroids0 = _gather_global_rows(x_local, init_idx, axis, shard)
+    else:
+        centroids0 = init.astype(x_local.dtype)
+
+    def body(centroids, key_t):
+        assign = _assign(x_local, centroids)
+        one_hot = jax.nn.one_hot(assign, k, dtype=x_local.dtype)
+        counts = jax.lax.psum(jnp.sum(one_hot, axis=0), axis)        # [K]
+        sums = jax.lax.psum(one_hot.T @ x_local, axis)               # [K, D]
+        centroids = sums / jnp.maximum(counts, 1.0)[:, None]
+        rand_idx = jax.random.randint(key_t, (k,), 0, n_global)
+        repair = _gather_global_rows(x_local, rand_idx, axis, shard)
+        return jnp.where((counts > 0)[:, None], centroids, repair), None
+
+    keys = jax.random.split(loop_key, iters)
+    centroids, _ = jax.lax.scan(body, centroids0, keys)
+    assign = _assign(x_local, centroids)
+    diff = x_local - centroids[assign]
+    distortion = jax.lax.psum(jnp.sum(diff * diff), axis) / n_global
+    return centroids, assign, distortion
+
+
+def _fit_assign_sharded(kind: str, key: jax.Array, q_local: jax.Array, k: int,
+                        iters: int, *, axis, init=None):
+    """Sharded fit: returns (cb1, cb2, a1_local, a2_local)."""
+    k1_key, k2_key = jax.random.split(key)
+    i1, i2 = (None, None) if init is None else init
+    if kind == "pq":
+        d = q_local.shape[-1]
+        cb1, a1, _ = kmeans_sharded(k1_key, q_local[:, : d // 2], k, iters,
+                                    axis=axis, init=i1)
+        cb2, a2, _ = kmeans_sharded(k2_key, q_local[:, d // 2:], k, iters,
+                                    axis=axis, init=i2)
+    else:
+        cb1, a1, _ = kmeans_sharded(k1_key, q_local, k, iters,
+                                    axis=axis, init=i1)
+        resid1 = q_local - cb1[a1]
+        cb2, a2, _ = kmeans_sharded(k2_key, resid1, k, iters,
+                                    axis=axis, init=i2)
+    return cb1, cb2, a1, a2
+
+
+def _assemble(index: MultiIndex, cb1, cb2, a1_local, a2_local, axis,
+              d_model: int) -> MultiIndex:
+    """All-gather shard assignments and rebuild the CSR layout replicated.
+
+    The sharded path never materializes residuals — it exists for the
+    training head state, which drops them (the §4 replication contract)."""
+    # deferred import: repro.dist pulls in the model zoo, which itself
+    # imports repro.index through the core shims at module-load time
+    from repro.dist.collectives import all_gather_rows
+    a1 = all_gather_rows(a1_local, axis)
+    a2 = all_gather_rows(a2_local, axis)
+    sorted_ids, offsets, counts, log_counts = _csr_from_assignments(
+        a1, a2, index.num_codewords)
+    return MultiIndex(index.kind, cb1, cb2, a1, a2,
+                      jnp.zeros((0, d_model), jnp.float32),
+                      sorted_ids, offsets, counts, log_counts)
+
+
+def refresh_sharded(index: MultiIndex, key: jax.Array, table_local: jax.Array,
+                    *, axis, iters: int = 10, policy: str = "fixed",
+                    threshold: float = 0.1):
+    """One refresh over a row-sharded class table. Runs inside shard_map;
+    `table_local` is this shard's contiguous row slice (row-major over the
+    linearized data axes). Returns (new_index, metrics) with the index
+    identical on every shard (residuals dropped).
+
+    'fixed' always runs the warm-started sharded refit; 'drift' runs the
+    frozen-codebook reassign and escalates to the refit through lax.cond —
+    the predicate is psum-derived, hence identical on every shard, so the
+    collectives inside the branch stay coherent."""
+    if policy not in REFRESH_POLICIES:
+        raise ValueError(f"refresh_policy must be one of {REFRESH_POLICIES}, "
+                         f"got {policy!r}")
+    d_model = table_local.shape[-1]
+    dp = _axis_size(axis)
+    shard = _linear_index(axis)
+    rows = table_local.shape[0]
+    n_global = rows * dp
+    k_drift, k_fit = jax.random.split(key)
+
+    # drift probe (shared by both policies; 'fixed' logs it for free) —
+    # per-shard frozen assignment + psum'd statistics: the same computation
+    # as the single-device lifecycle.drift_metrics, so the drift policy
+    # takes the same branch on either path
+    a1_frozen, a2_frozen = assign_against(index.kind, index.codebook1,
+                                          index.codebook2, table_local)
+    old_a1 = jax.lax.dynamic_slice_in_dim(index.assign1, shard * rows, rows)
+    old_a2 = jax.lax.dynamic_slice_in_dim(index.assign2, shard * rows, rows)
+    changed = (a1_frozen != old_a1) | (a2_frozen != old_a2)
+    frac = jax.lax.psum(jnp.sum(changed.astype(jnp.float32)), axis) / n_global
+    k = index.num_codewords
+    x1 = (table_local[:, : d_model // 2] if index.kind == "pq"
+          else table_local)
+    oh = jax.nn.one_hot(a1_frozen, k, dtype=x1.dtype)
+    counts = jax.lax.psum(jnp.sum(oh, axis=0), axis)
+    sums = jax.lax.psum(oh.T @ x1, axis)
+    cb1_next = jnp.where((counts > 0)[:, None],
+                         sums / jnp.maximum(counts, 1.0)[:, None],
+                         index.codebook1)
+    move = (jnp.sqrt(jnp.sum((cb1_next - index.codebook1) ** 2))
+            / (jnp.sqrt(jnp.sum(index.codebook1 ** 2)) + 1e-12))
+    drift = {"reassigned_frac": frac, "codeword_drift": move}
+
+    def full(_):
+        cb1, cb2, a1, a2 = _fit_assign_sharded(
+            index.kind, k_fit, table_local, k, iters, axis=axis,
+            init=(index.codebook1, index.codebook2))
+        return cb1, cb2, a1, a2, jnp.float32(1.0)
+
+    def cheap(_):
+        return (index.codebook1, index.codebook2, a1_frozen, a2_frozen,
+                jnp.float32(0.0))
+
+    if policy == "fixed":
+        cb1, cb2, a1, a2, did_full = full(None)
+    else:
+        do_full = (frac > threshold) | (move > threshold)
+        cb1, cb2, a1, a2, did_full = jax.lax.cond(do_full, full, cheap, None)
+    new_index = _assemble(index, cb1, cb2, a1, a2, axis, d_model)
+    recon_local = (jnp.concatenate([cb1[a1], cb2[a2]], axis=-1)
+                   if index.kind == "pq" else cb1[a1] + cb2[a2])
+    distortion = jax.lax.psum(
+        jnp.sum((table_local - recon_local) ** 2), axis) / n_global
+    metrics = {**drift, "did_full": did_full, "distortion": distortion}
+    return new_index, metrics

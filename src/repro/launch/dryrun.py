@@ -153,7 +153,9 @@ def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
                head_mode: str = "midx", layers_override: int | None = None,
                family_twin: bool = False, attn_impl: str = "flash",
                moe_impl: str = "shard_map", pad_heads: bool = False,
-               proposal: str | None = None, fused_head: str = "auto"):
+               proposal: str | None = None, fused_head: str = "auto",
+               refresh_every: int | None = None,
+               refresh_policy: str | None = None):
     import dataclasses as _dc
     from repro.models import attention as attn_mod
     from repro.models import moe as moe_mod
@@ -161,6 +163,10 @@ def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
     cfg = get_config(arch)
     if proposal is not None:
         cfg = cfg.with_head(proposal=proposal)
+    if refresh_every is not None:
+        cfg = cfg.with_head(refresh_every=refresh_every)
+    if refresh_policy is not None:
+        cfg = cfg.with_head(refresh_policy=refresh_policy)
     if pad_heads and cfg.num_heads and (cfg.num_heads % 16 or
                                         cfg.num_kv_heads % 16):
         # beyond-paper §Perf: pad Q/KV heads to multiples of the model axis so
@@ -296,19 +302,51 @@ def analyze(cfg, mesh, lowered, compiled, *, shape: ShapeConfig,
     }
 
 
+def lower_refresh_cell(cfg, mesh, *, refresh_policy: str) -> dict:
+    """Lower + compile the sharded index-refresh step for a train cell: the
+    SPMD partitioner must accept the row-sliced class table, and the HLO
+    gives the psum/all-gather schedule of the rebuild (DESIGN §8)."""
+    dp, tp = mesh_dp_tp(mesh)
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    fn = steps_mod.make_refresh_step(cfg, mesh, data_axes=data_axes,
+                                     policy=refresh_policy)
+    p_abs = steps_mod.abstract_params(cfg)
+    idx_abs = steps_mod.abstract_index(cfg, p_abs)
+    repl = NamedSharding(mesh, P())
+    with mesh:
+        t0 = time.time()
+        compiled = jax.jit(fn).lower(
+            _with_sharding(p_abs, _named(mesh, param_specs(cfg, p_abs, tp=tp))),
+            _with_sharding(idx_abs, _named(mesh, index_specs(idx_abs))),
+            steps_mod.key_struct(repl)).compile()
+        t_compile = time.time() - t0
+    coll = parse_collectives(compiled.as_text(), default_group=dp)
+    return {"policy": refresh_policy, "compile_s": t_compile,
+            "collectives": coll}
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              head_mode: str = "midx", out_dir: str = "experiments/dryrun",
              save_hlo: bool = False, attn_impl: str = "flash",
              moe_impl: str = "shard_map", pad_heads: bool = False,
-             fused_head: str = "auto") -> dict:
+             fused_head: str = "auto", refresh_every: int | None = None,
+             refresh_policy: str | None = None) -> dict:
     shape = shape_by_name(shape_name)
     cfg, mesh, lowered, compiled, times = lower_cell(
         arch, shape, multi_pod=multi_pod, head_mode=head_mode,
         attn_impl=attn_impl, moe_impl=moe_impl, pad_heads=pad_heads,
-        fused_head=fused_head)
+        fused_head=fused_head, refresh_every=refresh_every,
+        refresh_policy=refresh_policy)
     rec = analyze(cfg, mesh, lowered, compiled, shape=shape,
                   head_mode=head_mode)
     rec.update(times)
+    if refresh_policy is not None and shape.kind == "train" \
+            and head_mode == "midx":
+        rec["refresh"] = lower_refresh_cell(cfg, mesh,
+                                            refresh_policy=refresh_policy)
+        print(f"[dryrun] refresh step ({refresh_policy}): compiled in "
+              f"{rec['refresh']['compile_s']:.1f}s, collective bytes "
+              f"{rec['refresh']['collectives']['total_bytes']:.3g}")
     os.makedirs(out_dir, exist_ok=True)
     tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}__{head_mode}"
     with open(os.path.join(out_dir, tag + ".json"), "w") as f:
@@ -405,6 +443,13 @@ def main():
                     help="fused Pallas MIDX head: auto (backend decides), "
                          "on (compiled kernels), interpret (fused graph via "
                          "the Pallas interpreter — compiles anywhere), off")
+    ap.add_argument("--refresh-every", type=int, default=None,
+                    help="override cfg.head.refresh_every for the lowered "
+                         "config")
+    ap.add_argument("--refresh-policy", default=None,
+                    choices=(None, "fixed", "drift"),
+                    help="also lower + compile the sharded index-refresh "
+                         "step for train cells under this policy (DESIGN §8)")
     args = ap.parse_args()
 
     archs = ([args.arch] if args.arch else
@@ -435,7 +480,9 @@ def main():
                                      head_mode=hm, out_dir=args.out,
                                      save_hlo=args.save_hlo,
                                      attn_impl=args.attn, moe_impl=args.moe,
-                                     fused_head=args.fused_head)
+                                     fused_head=args.fused_head,
+                                     refresh_every=args.refresh_every,
+                                     refresh_policy=args.refresh_policy)
                     except Exception as e:
                         failures.append((arch, shape.name, mp, hm, str(e)))
                         print(f"[dryrun] FAIL {arch} {shape.name} "

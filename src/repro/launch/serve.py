@@ -23,11 +23,35 @@ import argparse
 import sys
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import pad_to
 from repro.serve import Engine, Request
+
+
+def proposal_kl(cfg, params, index, key, probes: int = 16) -> float:
+    """Mean KL(full softmax ‖ MIDX proposal) over random probe queries —
+    the serving-quality number an index swap moves (DESIGN §8)."""
+    from repro.core import midx
+    from repro.models.model import class_embeddings
+    table = class_embeddings(cfg, params).astype(jnp.float32)
+    return float(midx.proposal_kl(index, table, key, probes))
+
+
+def make_stale_index(cfg, engine: Engine, sigma: float, seed: int):
+    """An index fit to where the class embeddings were `sigma` of drift ago
+    (table + sigma·noise) — simulates serving against a stale index so the
+    --swap-step hot swap has a measurable KL gap to close."""
+    from repro.index import build
+    from repro.models.model import class_embeddings
+    table = class_embeddings(cfg, engine.params).astype(jnp.float32)
+    noise = jax.random.normal(jax.random.PRNGKey(seed ^ 0x5747A7E),
+                              table.shape)
+    return build(engine._index_key, table + sigma * noise,
+                 kind=cfg.head.quantizer, k=cfg.head.midx_k,
+                 iters=cfg.head.kmeans_iters, keep_residuals=False)
 
 
 def prompt_buckets(prompt: int) -> list[int]:
@@ -93,6 +117,17 @@ def main():
                     help="restore params+index from a serving checkpoint dir")
     ap.add_argument("--verify", type=int, default=2,
                     help="replay N requests solo and require identical output")
+    ap.add_argument("--swap-step", type=int, default=-1,
+                    help="hot-swap a freshly rebuilt index before this "
+                         "decode step (DESIGN §8); serving params are "
+                         "frozen, so the rebuild is bit-identical and "
+                         "--verify must still pass across the swap")
+    ap.add_argument("--stale-sigma", type=float, default=0.0,
+                    help="serve against an index fit to a sigma-perturbed "
+                         "class table (simulated staleness) and report the "
+                         "proposal KL gap the --swap-step swap closes; "
+                         "disables --verify (tokens legitimately change "
+                         "at the swap)")
     ap.add_argument("--warmup", type=int, default=1,
                     help="run a compile-absorbing warmup first so reported "
                          "latency percentiles are steady-state (0 disables)")
@@ -130,6 +165,28 @@ def main():
     if args.warmup:
         # reported percentiles then describe steady-state serving
         engine.warmup(prompt_buckets(args.prompt))
+    if args.head == "full" and (args.swap_step >= 0 or args.stale_sigma > 0):
+        raise SystemExit("--swap-step/--stale-sigma exercise the MIDX index "
+                         "lifecycle; --head full has no index to swap")
+    if args.head == "midx" and (args.swap_step >= 0 or args.stale_sigma > 0):
+        # a restored index was built under the trainer's refresh key, so a
+        # local rebuild would not be bit-identical — hot-swap a copy instead
+        # (same machinery, token-identity preserved for --verify)
+        fresh = (jax.tree_util.tree_map(jnp.copy, engine.index) if args.ckpt
+                 else engine.rebuild_index())
+        if args.stale_sigma > 0:
+            stale = make_stale_index(cfg, engine, args.stale_sigma, args.seed)
+            k_probe = jax.random.PRNGKey(args.seed + 1)
+            kl_stale = proposal_kl(cfg, engine.params, stale, k_probe)
+            kl_fresh = proposal_kl(cfg, engine.params, fresh, k_probe)
+            print(f"[serve] proposal KL(softmax‖Q): stale={kl_stale:.4f} "
+                  f"refreshed={kl_fresh:.4f} (gap the swap closes: "
+                  f"{kl_stale - kl_fresh:.4f})")
+            engine.swap_index(stale)
+        if args.swap_step >= 0:
+            engine.schedule_swap(fresh, at_step=args.swap_step)
+            print(f"[serve] index hot-swap scheduled before decode step "
+                  f"{args.swap_step}")
     results = engine.run(reqs)
     s = engine.stats.summary()
     print(f"[serve] head={args.head} arch={cfg.name} requests={args.requests} "
@@ -140,6 +197,10 @@ def main():
         print("[serve] WARNING: expected >=2 admission waves", file=sys.stderr)
 
     n_verify = min(args.verify, len(reqs))
+    if args.stale_sigma > 0 and n_verify:
+        print("[serve] --stale-sigma active: skipping verify (tokens "
+              "legitimately change when the refreshed index swaps in)")
+        n_verify = 0
     if n_verify:
         bad = 0
         for r in reqs[:n_verify]:

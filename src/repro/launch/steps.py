@@ -193,10 +193,60 @@ def make_decode_step(cfg: ModelConfig, *, window: Optional[int] = None,
     return serve_step
 
 
-def make_refresh_step(cfg: ModelConfig):
-    def refresh(params, index, key):
-        return heads.refresh_head_state(cfg, params, index, key)
-    return refresh
+def make_refresh_step(cfg: ModelConfig, mesh=None, *,
+                      data_axes=("data",), policy: Optional[str] = None):
+    """Index refresh step: refresh(params, index, key) -> (index, metrics).
+
+    Without a mesh the rebuild runs single-device under
+    cfg.head.refresh_policy (DESIGN §8): 'fixed' = warm-started full refit
+    every event, 'drift' = reassign-only with lax.cond escalation to the
+    refit when drift exceeds cfg.head.refresh_drift_threshold.
+
+    With a mesh, the class table is row-sliced over `data_axes`
+    (dist.sharding.refresh_table_spec) so each shard quantizes only its
+    rows; K-means statistics travel by psum and the assignments all-gather
+    back for the replicated CSR rebuild (repro.index.sharded). Falls back
+    to the replicated step when the padded vocab does not divide the data
+    degree.
+    """
+    pol = policy or cfg.head.refresh_policy
+
+    def refresh_replicated(params, index, key):
+        return heads.refresh_head_state_with_policy(cfg, params, index, key,
+                                                    policy=pol)
+
+    if mesh is None:
+        return refresh_replicated
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import refresh_table_spec
+    from repro.index.sharded import refresh_sharded
+    from repro.models.model import class_embeddings
+
+    axes = tuple(data_axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in axes:
+        dp *= sizes[a]
+    if refresh_table_spec(padded_vocab=cfg.padded_vocab, dp=dp,
+                          data_axes=axes) == P():
+        return refresh_replicated         # vocab not divisible: replicated
+    ax = axes if len(axes) > 1 else axes[0]
+    rows = cfg.padded_vocab // dp
+
+    def body(params, index, key):
+        table = class_embeddings(cfg, params).astype(jnp.float32)
+        shard = jnp.int32(0)
+        for a in axes:
+            shard = shard * sizes[a] + jax.lax.axis_index(a)
+        local = jax.lax.dynamic_slice_in_dim(table, shard * rows, rows)
+        return refresh_sharded(index, key, local, axis=ax,
+                               iters=cfg.head.kmeans_iters, policy=pol,
+                               threshold=cfg.head.refresh_drift_threshold)
+
+    return shard_map(body, mesh=mesh, in_specs=(P(), P(), P()),
+                     out_specs=(P(), P()), check_rep=False)
 
 
 # ---------------------------------------------------------------------------

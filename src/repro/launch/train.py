@@ -26,10 +26,12 @@ import numpy as np
 from repro.checkpoint import CheckpointManager, save_serving_state
 from repro.configs import get_config
 from repro.data import ZipfLM, make_lm_stream
+from repro.index import IndexLifecycle
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_debug_mesh, mesh_dp_tp
 from repro.models import heads, init_params
 from repro.optim import adamw, cosine_schedule
+from repro.utils import metrics as metrics_mod
 
 
 @dataclasses.dataclass
@@ -68,7 +70,11 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
                grad_transport: str = "fp32",
                fused_head: Optional[bool] = None,
                fused_interpret: bool = False,
-               on_metrics: Optional[Callable[[int, dict], None]] = None):
+               refresh_every: Optional[int] = None,
+               refresh_policy: Optional[str] = None,
+               refresh_lag: Optional[int] = None,
+               on_metrics: Optional[Callable[[int, dict], None]] = None,
+               on_refresh: Optional[Callable[[Any], None]] = None):
     """Single-process training loop (the multi-host launcher shards this).
 
     total_steps: the JOB's schedule horizon — must stay fixed across
@@ -82,6 +88,12 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
     feedback carry is step-local state: it deliberately re-zeros on restart
     rather than being checkpointed (it is a sub-quantum correction).
     """
+    refresh_kw = {k: v for k, v in (("refresh_every", refresh_every),
+                                    ("refresh_policy", refresh_policy),
+                                    ("refresh_lag", refresh_lag))
+                  if v is not None}
+    if refresh_kw:
+        cfg = cfg.with_head(**refresh_kw)
     key = jax.random.PRNGKey(seed)
     k_init, k_index, k_loop = jax.random.split(key, 3)
     horizon = total_steps or steps
@@ -117,7 +129,19 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
             cfg, optimizer, head_mode=head_mode, fused_head=fused_head,
             interpret=fused_interpret))
     ef = steps_mod.init_grad_transport_state(params, grad_transport, dp)
-    refresh = jax.jit(steps_mod.make_refresh_step(cfg))
+    # index lifecycle (DESIGN §8): the refresh for step s runs on dispatch
+    # while up to `refresh_lag` subsequent steps train against the old index;
+    # on a mesh the rebuild is sharded over the data axes
+    if mesh is not None:
+        refresh = jax.jit(steps_mod.make_refresh_step(
+            cfg, mesh, data_axes=tuple(a for a in mesh.axis_names
+                                       if a != "model")))
+    else:
+        refresh = jax.jit(steps_mod.make_refresh_step(cfg))
+    lifecycle = IndexLifecycle(
+        refresh, every=cfg.head.refresh_every, lag=cfg.head.refresh_lag,
+        base_key=k_index,
+        enabled=(head_mode or cfg.head.mode) == "midx")
 
     ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
     start_step = 0
@@ -147,9 +171,14 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
             print(f"[train] straggler warning at step {step}: {dt:.3f}s "
                   f"(ewma {watchdog.ewma:.3f}s) -> "
                   f"{watchdog.rebalance_plan(1)}")
-        if cfg.head.refresh_every and (step + 1) % cfg.head.refresh_every == 0 \
-                and (head_mode or cfg.head.mode) == "midx":
-            index = refresh(params, index, jax.random.fold_in(k_index, step))
+        index, ev = lifecycle.step(step, params, index)
+        if ev is not None:
+            print(f"[train] refresh @{ev.step} (swap @{ev.swap_step}) "
+                  f"mode={ev.mode} {ev.seconds:.3f}s "
+                  f"reassigned={ev.metrics['reassigned_frac']:.3f} "
+                  f"drift={ev.metrics['codeword_drift']:.3f}")
+            if on_refresh:
+                on_refresh(ev)
         if step % log_every == 0 or step == steps - 1:
             print(f"[train] step {step:5d} loss {loss:.4f} "
                   f"ce {float(metrics['ce']):.4f} "
@@ -158,8 +187,21 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
         if on_metrics:
             on_metrics(step, metrics)
         if ckpt is not None and (step + 1) % ckpt_every == 0:
+            # the saved index must never be mid-flight: force-complete any
+            # pending refresh so restore resumes from a self-contained state
+            index, ev = lifecycle.flush(step, index)
+            if ev is not None and on_refresh:
+                on_refresh(ev)
             ckpt.save(step + 1, (params, opt_state, index),
                       metadata={"next_step": step + 1})
+    index, ev = lifecycle.flush(steps - 1, index)
+    if ev is not None and on_refresh:
+        on_refresh(ev)
+    if lifecycle.events:
+        s = metrics_mod.refresh_summary(lifecycle.events)
+        print(f"[train] refresh summary: {s['refreshes']} events "
+              f"({s['full_refits']} full / {s['reassign_only']} reassign) "
+              f"{s['refresh_s']:.2f}s total")
     if ckpt is not None:
         ckpt.save(steps, (params, opt_state, index),
                   metadata={"next_step": steps})
@@ -193,6 +235,18 @@ def main():
                          "cfg.head.use_fused_head gated on backend; on = "
                          "compiled kernels (TPU only); interpret = fused "
                          "graph via the Pallas interpreter (any backend)")
+    ap.add_argument("--refresh-every", type=int, default=None,
+                    help="steps between index refresh events "
+                         "(default: cfg.head.refresh_every)")
+    ap.add_argument("--refresh-policy", default=None,
+                    choices=(None, "fixed", "drift"),
+                    help="index refresh policy (DESIGN §8): fixed = full "
+                         "warm-started refit every event; drift = reassign-"
+                         "only, escalating to the refit when drift exceeds "
+                         "cfg.head.refresh_drift_threshold")
+    ap.add_argument("--refresh-lag", type=int, default=None,
+                    help="staleness window: swap the rebuilt index in this "
+                         "many steps after dispatch (0 = synchronous)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -208,7 +262,10 @@ def main():
                ckpt_dir=args.ckpt, head_mode=args.head, lr=args.lr,
                mesh=mesh, grad_transport=args.grad_transport,
                fused_head=fused,
-               fused_interpret=args.fused_head == "interpret")
+               fused_interpret=args.fused_head == "interpret",
+               refresh_every=args.refresh_every,
+               refresh_policy=args.refresh_policy,
+               refresh_lag=args.refresh_lag)
 
 
 if __name__ == "__main__":

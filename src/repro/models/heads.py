@@ -34,8 +34,30 @@ def init_head_state(cfg: ModelConfig, params: dict, key: jax.Array) -> MultiInde
 
 def refresh_head_state(cfg: ModelConfig, params: dict, state: MultiIndex,
                        key: jax.Array) -> MultiIndex:
+    """Full refit against the current class table (warm-started, DESIGN §8).
+
+    Back-compat entry point returning only the index; the lifecycle call
+    sites use `refresh_head_state_with_policy` for drift metrics and the
+    reassign-only escalation path."""
     table = class_embeddings(cfg, params).astype(jnp.float32)
     return index_mod.refresh(state, key, table, iters=cfg.head.kmeans_iters)
+
+
+def refresh_head_state_with_policy(cfg: ModelConfig, params: dict,
+                                   state: MultiIndex, key: jax.Array,
+                                   policy: Optional[str] = None
+                                   ) -> tuple[MultiIndex, dict]:
+    """One refresh event under cfg.head.refresh_policy (or an override).
+
+    Returns (new_index, metrics) where metrics carries reassigned_frac /
+    codeword_drift / did_full / distortion — the step-log payload
+    (DESIGN §8)."""
+    from repro.index import lifecycle as lifecycle_mod
+    table = class_embeddings(cfg, params).astype(jnp.float32)
+    return lifecycle_mod.refresh_with_policy(
+        state, key, table, iters=cfg.head.kmeans_iters,
+        policy=policy or cfg.head.refresh_policy,
+        threshold=cfg.head.refresh_drift_threshold)
 
 
 def loss_full(cfg: ModelConfig, params: dict, hidden: jax.Array,

@@ -101,8 +101,11 @@ class Engine:
         k_init, k_idx = jax.random.split(key)
         self.params = init_params(cfg, k_init) if params is None else params
         self.index = index
+        self._index_key = k_idx       # rebuild_index() default: same key ->
+                                      # frozen params reproduce the index
         if head == "midx" and self.index is None:
             self.index = heads.init_head_state(cfg, self.params, k_idx)
+        self._pending_swap = None     # (at_decode_step, index) | None
         self.pool = PagePool(sv.resolved_num_pages, sv.page_size,
                              sv.pages_per_slot, sv.max_slots)
         self.sched = Scheduler(sv.max_slots, self.pool)
@@ -151,6 +154,42 @@ class Engine:
         return save_serving_state(root, step, self.params, self.index,
                                   metadata={"arch": self.cfg.name,
                                             "head": self.head})
+
+    # ------------------------------------------------------------ index swap
+    def swap_index(self, index) -> None:
+        """Atomically install a freshly built index (DESIGN §8).
+
+        The index is only read between decode steps (the jitted step takes
+        it as an argument), so installing a new one never disturbs in-flight
+        slots: their KV pages, positions and PRNG streams are untouched, and
+        the very next step samples through the new proposal. Swapping an
+        index rebuilt from unchanged params is token-identity-preserving —
+        what the serve CLI's --verify machinery checks across --swap-step."""
+        self.index = index
+        if getattr(self, "_solo", None) is not None:
+            self._solo.index = index
+
+    def schedule_swap(self, index, at_step: int) -> None:
+        """Install `index` just before decode step `at_step` (counted by
+        self.stats.steps) of a subsequent `run` — the mid-stream hot swap."""
+        self._pending_swap = (at_step, index)
+
+    def rebuild_index(self, key: Optional[jax.Array] = None):
+        """Rebuild the MIDX index from the engine's current params.
+
+        With the default key this reproduces the construction the engine
+        booted with, so unchanged params yield a bit-identical index — the
+        'unchanged index' swap. A training loop pushing updated params would
+        pass its own refresh key here."""
+        return heads.init_head_state(self.cfg, self.params,
+                                     key if key is not None
+                                     else self._index_key)
+
+    def _maybe_swap(self) -> None:
+        if self._pending_swap is not None and \
+                self.stats.steps >= self._pending_swap[0]:
+            self.swap_index(self._pending_swap[1])
+            self._pending_swap = None
 
     # ------------------------------------------------------------ key streams
     def _req_key(self, req: Request) -> jax.Array:
@@ -253,6 +292,8 @@ class Engine:
                 if nxt is not None and nxt > now:
                     time.sleep(min(nxt - now, 0.05))
                 continue
+            # hot-swap window: between decode steps, never mid-step
+            self._maybe_swap()
             # one slot-packed decode step over all slots
             tokens = np.zeros((sv.max_slots,), np.int32)
             pos = np.zeros((sv.max_slots,), np.int32)

@@ -46,3 +46,29 @@ def latency_summary(latencies_s, qs=(50, 95, 99)) -> dict[str, float]:
     """Serving-style per-token latency summary in milliseconds (DESIGN §5)."""
     pct = percentiles(np.asarray(latencies_s, np.float64) * 1e3, qs)
     return {f"p{q}_ms": v for q, v in pct.items()}
+
+
+def refresh_summary(events) -> dict[str, float]:
+    """Aggregate index-refresh events from the train loop (DESIGN §8).
+
+    `events` is a sequence of repro.index.RefreshEvent (or anything with
+    .seconds / .mode / .metrics). Reports the total host seconds spent on
+    refreshes, the full-refit vs reassign-only split, and mean drift — the
+    numbers the refresh-policy comparison is judged on."""
+    events = list(events)
+    n = len(events)
+    if n == 0:
+        return {"refreshes": 0, "refresh_s": 0.0, "full_refits": 0,
+                "reassign_only": 0, "mean_reassigned_frac": float("nan"),
+                "mean_codeword_drift": float("nan")}
+    full = sum(1 for e in events if e.mode == "full")
+    return {
+        "refreshes": n,
+        "refresh_s": float(sum(e.seconds for e in events)),
+        "full_refits": full,
+        "reassign_only": n - full,
+        "mean_reassigned_frac": float(np.mean(
+            [e.metrics.get("reassigned_frac", np.nan) for e in events])),
+        "mean_codeword_drift": float(np.mean(
+            [e.metrics.get("codeword_drift", np.nan) for e in events])),
+    }

@@ -1,0 +1,394 @@
+"""repro.index lifecycle: incremental refresh, drift policy, sharded rebuild,
+overlapped double buffer, serving hot-swap (DESIGN §8).
+
+Covers:
+  - warm-start K-means: `init=` reaches lower distortion than cold at equal
+    iteration budget on a drifted table;
+  - reassign-only rebuild == the frozen-codebook assignments of a full build
+    on an unchanged table (CSR included), for both quantizers;
+  - refresh_adaptive routes: reassign-only below threshold, full refit above;
+  - CSR invariants survive repeated incremental updates (hypothesis);
+  - sharded refresh (shard_map, 8 forced host devices via subprocess)
+    produces a valid, replicated index whose reassign path matches the
+    single-device path bitwise;
+  - IndexLifecycle overlap: dispatch at cadence, swap `lag` steps later,
+    flush() force-completes at checkpoint boundaries;
+  - Engine.swap_index of an unchanged index mid-stream is token-identical.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.index import (IndexLifecycle, build, drift_metrics, kmeans,
+                         reassign, refresh, refresh_adaptive,
+                         refresh_with_policy)
+from repro.serve import Engine, Request
+
+N, D, K = 400, 32, 8
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def emb():
+    return jax.random.normal(jax.random.PRNGKey(0), (N, D)) * 0.5
+
+
+# ---------------------------------------------------------------------------
+# warm-start K-means
+# ---------------------------------------------------------------------------
+
+def test_kmeans_warm_start_beats_cold_at_equal_budget(emb):
+    key = jax.random.PRNGKey(1)
+    cold8 = kmeans(key, emb, K, iters=8)
+    drifted = emb + 0.02 * jax.random.normal(jax.random.fold_in(key, 1),
+                                             emb.shape)
+    k2 = jax.random.fold_in(key, 2)
+    warm1 = kmeans(k2, drifted, K, iters=1, init=cold8.centroids)
+    cold1 = kmeans(k2, drifted, K, iters=1)
+    assert float(warm1.distortion) < float(cold1.distortion)
+    # one warm iteration lands within a few percent of a full cold refit
+    cold8b = kmeans(k2, drifted, K, iters=8)
+    assert float(warm1.distortion) <= float(cold8b.distortion) * 1.10
+
+
+def test_kmeans_warm_start_deterministic(emb):
+    key = jax.random.PRNGKey(3)
+    init = kmeans(key, emb, K, iters=4).centroids
+    a = kmeans(key, emb, K, iters=2, init=init)
+    b = kmeans(key, emb, K, iters=2, init=init)
+    np.testing.assert_array_equal(np.asarray(a.centroids),
+                                  np.asarray(b.centroids))
+
+
+# ---------------------------------------------------------------------------
+# reassign-only vs full rebuild
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["pq", "rq"])
+def test_reassign_parity_on_frozen_table(emb, kind):
+    """With codebooks frozen and the table unchanged, the incremental path
+    must reproduce the full build's assignments and CSR layout exactly."""
+    idx = build(jax.random.PRNGKey(1), emb, kind=kind, k=K, iters=5)
+    inc = reassign(idx, emb)
+    for field in ("assign1", "assign2", "sorted_ids", "offsets", "counts"):
+        np.testing.assert_array_equal(np.asarray(getattr(idx, field)),
+                                      np.asarray(getattr(inc, field)),
+                                      err_msg=field)
+    np.testing.assert_allclose(np.asarray(idx.residuals),
+                               np.asarray(inc.residuals), atol=1e-6)
+
+
+def test_reassign_keeps_residual_stripping(emb):
+    idx = build(jax.random.PRNGKey(1), emb, kind="rq", k=K, iters=3,
+                keep_residuals=False)
+    inc = reassign(idx, emb + 0.05)
+    assert inc.residuals.shape[0] == 0
+    assert int(inc.counts.sum()) == N
+
+
+def test_drift_metrics_zero_on_unchanged_table(emb):
+    idx = build(jax.random.PRNGKey(1), emb, kind="rq", k=K, iters=5)
+    m = drift_metrics(idx, emb)
+    assert float(m["reassigned_frac"]) == 0.0
+    # codebooks sit at the Lloyd fixed point of their own assignments
+    assert float(m["codeword_drift"]) < 0.2
+
+
+def test_refresh_adaptive_routes_by_drift(emb):
+    idx = build(jax.random.PRNGKey(1), emb, kind="rq", k=K, iters=5,
+                keep_residuals=False)
+    same, m_same = refresh_adaptive(idx, jax.random.PRNGKey(2), emb,
+                                    iters=5, threshold=0.5)
+    assert float(m_same["did_full"]) == 0.0
+    np.testing.assert_array_equal(np.asarray(same.codebook1),
+                                  np.asarray(idx.codebook1))
+    moved = jax.random.normal(jax.random.PRNGKey(9), (N, D))
+    new, m_new = refresh_adaptive(idx, jax.random.PRNGKey(3), moved,
+                                  iters=5, threshold=0.5)
+    assert float(m_new["did_full"]) == 1.0
+    assert int(new.counts.sum()) == N
+    assert float(m_new["reassigned_frac"]) > 0.5
+
+
+def test_refresh_with_policy_fixed_always_refits(emb):
+    idx = build(jax.random.PRNGKey(1), emb, kind="rq", k=K, iters=5,
+                keep_residuals=False)
+    _, m = refresh_with_policy(idx, jax.random.PRNGKey(2), emb,
+                               iters=5, policy="fixed")
+    assert float(m["did_full"]) == 1.0
+    with pytest.raises(ValueError):
+        refresh_with_policy(idx, jax.random.PRNGKey(2), emb, policy="bogus")
+
+
+# ---------------------------------------------------------------------------
+# CSR invariants under repeated incremental updates (property test)
+# ---------------------------------------------------------------------------
+
+def _check_csr(idx, n):
+    counts = np.asarray(idx.counts).reshape(-1)
+    offsets = np.asarray(idx.offsets)
+    sorted_ids = np.asarray(idx.sorted_ids)
+    assert counts.sum() == n
+    assert np.all(np.diff(offsets) >= 0), "offsets must be monotone"
+    np.testing.assert_array_equal(np.diff(offsets), counts)
+    assert sorted(sorted_ids.tolist()) == list(range(n))
+    joint = (np.asarray(idx.assign1) * idx.num_codewords
+             + np.asarray(idx.assign2))
+    for c in np.nonzero(counts)[0][:10]:
+        members = sorted_ids[offsets[c]: offsets[c + 1]]
+        assert np.all(joint[members] == c)
+
+
+def test_csr_invariants_survive_repeated_incremental_updates():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st, HealthCheck
+
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(24, 96),
+           k=st.sampled_from([2, 4, 8]), kind=st.sampled_from(["pq", "rq"]),
+           rounds=st.integers(1, 4))
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def inner(seed, n, k, kind, rounds):
+        key = jax.random.PRNGKey(seed)
+        table = jax.random.normal(key, (n, 16))
+        idx = build(jax.random.fold_in(key, 1), table, kind=kind, k=k,
+                    iters=2, keep_residuals=False)
+        for r in range(rounds):
+            table = table + 0.1 * jax.random.normal(
+                jax.random.fold_in(key, 10 + r), table.shape)
+            idx, m = refresh_adaptive(idx, jax.random.fold_in(key, 20 + r),
+                                      table, iters=2, threshold=0.15)
+            _check_csr(idx, n)
+            assert 0.0 <= float(m["reassigned_frac"]) <= 1.0
+
+    inner()
+
+
+# ---------------------------------------------------------------------------
+# sharded rebuild
+# ---------------------------------------------------------------------------
+
+def _run_sub(py: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(py)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+def test_sharded_refresh_multi_device():
+    """8-shard rebuild: reassign path bitwise == single-device reassign;
+    full path produces a valid replicated index and matching drift metrics."""
+    _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.index import build, reassign, refresh_sharded, drift_metrics
+
+        key = jax.random.PRNGKey(0)
+        n, d, k = 512, 32, 8
+        emb = jax.random.normal(key, (n, d)) * 0.5
+        moved = emb + 0.1 * jax.random.normal(jax.random.fold_in(key, 1),
+                                              (n, d))
+        idx = build(jax.random.fold_in(key, 2), emb, kind="rq", k=k,
+                    iters=4, keep_residuals=False)
+        mesh = jax.make_mesh((8,), ("data",))
+
+        def make(policy):
+            def body(index, key, table):
+                return refresh_sharded(index, key, table, axis="data",
+                                       iters=4, policy=policy, threshold=0.2)
+            return jax.jit(shard_map(body, mesh=mesh,
+                                     in_specs=(P(), P(), P("data")),
+                                     out_specs=(P(), P()), check_rep=False))
+
+        # reassign path (drift below threshold on the unchanged table)
+        out, m = make("drift")(idx, jax.random.fold_in(key, 3), emb)
+        ref = reassign(idx, emb)
+        assert float(m["did_full"]) == 0.0
+        for f in ("assign1", "assign2", "sorted_ids", "offsets", "counts"):
+            np.testing.assert_array_equal(np.asarray(getattr(out, f)),
+                                          np.asarray(getattr(ref, f)), f)
+        # the sharded drift probe is the same deterministic computation as
+        # the single-device one — both metrics must agree, so the drift
+        # policy takes the same branch on either path
+        m_ref = drift_metrics(idx, emb)
+        assert abs(float(m["reassigned_frac"])
+                   - float(m_ref["reassigned_frac"])) < 1e-6
+        assert abs(float(m["codeword_drift"])
+                   - float(m_ref["codeword_drift"])) < 1e-5
+
+        # full path on a moved table
+        out2, m2 = make("fixed")(idx, jax.random.fold_in(key, 4), moved)
+        assert float(m2["did_full"]) == 1.0
+        assert int(out2.counts.sum()) == n
+        assert sorted(np.asarray(out2.sorted_ids).tolist()) == list(range(n))
+        # distortion of the sharded refit ~ the single-device refit
+        from repro.index import refresh
+        ref_full = refresh(idx, jax.random.fold_in(key, 4), moved, iters=4)
+        def distortion(ix):
+            rec = ix.codebook1[ix.assign1] + ix.codebook2[ix.assign2]
+            return float(jnp.mean(jnp.sum((moved - rec) ** 2, -1)))
+        assert distortion(out2) < distortion(ref_full) * 1.25
+        print("sharded OK")
+    """)
+
+
+def test_make_refresh_step_sharded_smoke():
+    """make_refresh_step on a 1-device mesh: same API, valid index out."""
+    from repro.launch import steps as steps_mod
+    from repro.models import heads, init_params
+    # threshold 0.5: the reduced config's 3-iter k-means is not at a Lloyd
+    # fixed point, so the one-step codeword-movement probe is nonzero even
+    # with frozen params — only the reassigned fraction is exactly 0
+    cfg = get_config("paper-lm").reduced().with_head(
+        refresh_drift_threshold=0.5)
+    mesh = jax.make_mesh((1,), ("data",))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    index = heads.init_head_state(cfg, params, jax.random.fold_in(key, 1))
+    step = jax.jit(steps_mod.make_refresh_step(cfg, mesh,
+                                               policy="drift"))
+    new, metrics = step(params, index, jax.random.fold_in(key, 2))
+    assert int(new.counts.sum()) == cfg.padded_vocab
+    assert float(metrics["reassigned_frac"]) == 0.0
+    assert float(metrics["did_full"]) == 0.0   # params unchanged -> no drift
+
+
+# ---------------------------------------------------------------------------
+# overlapped lifecycle
+# ---------------------------------------------------------------------------
+
+def _toy_refresh(tag):
+    def fn(params, index, key):
+        del params, key
+        return jax.tree_util.tree_map(jnp.asarray, index), {
+            "reassigned_frac": jnp.float32(0.0),
+            "codeword_drift": jnp.float32(0.0),
+            "did_full": jnp.float32(tag), "distortion": jnp.float32(1.0)}
+    return fn
+
+
+def test_lifecycle_overlap_swaps_lag_steps_later(emb):
+    idx = build(jax.random.PRNGKey(1), emb, kind="rq", k=K, iters=2,
+                keep_residuals=False)
+    lc = IndexLifecycle(_toy_refresh(1.0), every=4, lag=2,
+                        base_key=jax.random.PRNGKey(0))
+    swaps = []
+    cur = idx
+    for step in range(12):
+        cur, ev = lc.step(step, None, cur)
+        if ev is not None:
+            swaps.append((ev.step, ev.swap_step))
+    # dispatch at 3 and 7 -> swap at 5 and 9; the step-11 dispatch is still
+    # in flight at loop end
+    assert swaps == [(3, 5), (7, 9)]
+    assert lc.in_flight
+    cur, ev = lc.flush(11, cur)
+    assert ev is not None and (ev.step, ev.swap_step) == (11, 11)
+    assert not lc.in_flight
+    assert lc.summary()["refreshes"] == 3
+
+
+def test_lifecycle_lag_zero_is_synchronous(emb):
+    idx = build(jax.random.PRNGKey(1), emb, kind="rq", k=K, iters=2,
+                keep_residuals=False)
+    lc = IndexLifecycle(_toy_refresh(0.0), every=3, lag=0,
+                        base_key=jax.random.PRNGKey(0))
+    events = []
+    cur = idx
+    for step in range(9):
+        cur, ev = lc.step(step, None, cur)
+        if ev is not None:
+            events.append(ev)
+    assert [(e.step, e.swap_step) for e in events] == [(2, 2), (5, 5), (8, 8)]
+    assert all(e.mode == "reassign" for e in events)
+    assert not lc.in_flight
+
+
+def test_lifecycle_disabled_never_dispatches(emb):
+    idx = build(jax.random.PRNGKey(1), emb, kind="rq", k=K, iters=2)
+    calls = []
+
+    def fn(params, index, key):
+        calls.append(1)
+        return index, {}
+
+    lc = IndexLifecycle(fn, every=1, base_key=jax.random.PRNGKey(0),
+                        enabled=False)
+    for step in range(5):
+        out, ev = lc.step(step, None, idx)
+        assert out is idx and ev is None
+    assert not calls
+
+
+# ---------------------------------------------------------------------------
+# serving hot-swap
+# ---------------------------------------------------------------------------
+
+def _reqs(cfg, num, plen, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=plen).astype(np.int32),
+                    max_new=max_new, seed=seed)
+            for i in range(num)]
+
+
+def test_engine_swap_unchanged_index_token_identical():
+    """A mid-stream swap_index() of a bit-identical index must not change
+    any in-flight request's tokens — the --verify contract (DESIGN §8)."""
+    cfg = get_config("paper-lm").reduced().with_serve(
+        max_slots=2, page_size=4, max_seq=32)
+    key = jax.random.PRNGKey(5)
+    base = Engine(cfg, init_key=key, head="midx")
+    plain = base.run(_reqs(cfg, 3, 6, 10))
+
+    swapped_eng = Engine(cfg, init_key=key, head="midx")
+    rebuilt = swapped_eng.rebuild_index()     # frozen params -> identical
+    np.testing.assert_array_equal(np.asarray(rebuilt.sorted_ids),
+                                  np.asarray(swapped_eng.index.sorted_ids))
+    swapped_eng.schedule_swap(rebuilt, at_step=3)
+    swapped = swapped_eng.run(_reqs(cfg, 3, 6, 10))
+    assert swapped_eng._pending_swap is None  # the swap really happened
+    for rid in plain:
+        np.testing.assert_array_equal(plain[rid].tokens, swapped[rid].tokens)
+
+
+def test_engine_swap_changes_future_tokens_only():
+    """Swapping a *different* index mid-stream may change tokens after the
+    swap point but never the ones already emitted."""
+    cfg = get_config("paper-lm").reduced().with_serve(
+        max_slots=1, page_size=4, max_seq=32)
+    key = jax.random.PRNGKey(6)
+    a = Engine(cfg, init_key=key, head="midx")
+    out_a = a.run(_reqs(cfg, 1, 6, 12))[0].tokens
+
+    b = Engine(cfg, init_key=key, head="midx")
+    other = b.rebuild_index(jax.random.PRNGKey(123))   # different k-means
+    b.schedule_swap(other, at_step=4)
+    out_b = b.run(_reqs(cfg, 1, 6, 12))[0].tokens
+    # prefix up to the swap step identical (1 prefill token + 4 decode steps)
+    np.testing.assert_array_equal(out_a[:5], out_b[:5])
+
+
+def test_train_loop_drift_policy_smoke():
+    from repro.launch.train import train_loop
+    cfg = get_config("paper-lm").reduced()
+    events = []
+    _, _, index, history = train_loop(
+        cfg, steps=10, batch_size=4, seq_len=16, log_every=100,
+        refresh_every=3, refresh_policy="drift", refresh_lag=1,
+        on_refresh=events.append)
+    assert np.isfinite(history).all()
+    assert len(events) >= 2
+    assert int(index.counts.sum()) == cfg.padded_vocab
