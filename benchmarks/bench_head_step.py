@@ -84,4 +84,20 @@ def run(fast: bool = True):
                      f"T={tt};M={mm};D={dd};V={vv}"))
         rows.append((f"head_step/hbm_{tag}_fused_mb", fb / 2**20,
                      f"saved_mb={(ub - fb) / 2**20:.1f}"))
+
+    # vocab-parallel head state at V=10M (DESIGN §9): per-device bytes of
+    # the class table + MIDX index, replicated vs row-sharded over 8 vocab
+    # shards. Analytic (fp32 table; CSR = sorted_ids + assign1/2 int32 per
+    # class + K² offsets/counts/log_counts) — what `--vocab-parallel 8`
+    # divides by 8, and what the dryrun 10M cell shards.
+    v10, d10, k10, vp = 10_000_000, 1024, 1024, 8
+    table_b = 4.0 * v10 * d10
+    index_b = 4.0 * (3 * v10 + (k10 * k10 + 1) + 2 * k10 * k10)
+    rep_gb = (table_b + index_b) / 2**30
+    vp_gb = ((table_b + index_b) / vp) / 2**30
+    rows.append(("head_step/v10m_replicated_gb", rep_gb,
+                 f"V={v10};D={d10};K={k10};table+index per device"))
+    rows.append(("head_step/v10m_vocab_parallel8_gb", vp_gb,
+                 f"vp={vp};rows_per_shard={v10 // vp};"
+                 f"saved_gb={rep_gb - vp_gb:.1f}"))
     return rows

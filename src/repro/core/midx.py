@@ -72,13 +72,18 @@ def log_prob(index: MultiIndex, z: jax.Array, ids: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def sample(index: MultiIndex, key: jax.Array, z: jax.Array, m: int, *,
-           tables_fn=None) -> Draw:
+           tables_fn=None, member_fn=None) -> Draw:
     """Per-token fast MIDX. z: [..., D] -> ids/log_q: [..., m].
 
     `tables_fn(index, z) -> (s1, s2, log_psi, lse)` optionally replaces the
     jnp score computation (e.g. the fused midx_probs Pallas kernel via
     `kernels.dispatch.midx_tables_fn`); the K×K joint tile is then rebuilt
     from s1/s2 on the fly — same draws, no second pass over z.
+
+    `member_fn(key, flat_cluster) -> ids` optionally replaces the CSR member
+    draw (`_member_uniform`) — the vocab-parallel head uses this to locate
+    each draw on its owner shard (dist.vocab_parallel) while the proposal
+    math above stays untouched.
     """
     k_pair, k_member = jax.random.split(key)
     kk = index.num_codewords
@@ -94,7 +99,8 @@ def sample(index: MultiIndex, key: jax.Array, z: jax.Array, m: int, *,
     # m independent draws per row: broadcast logits over a new sample dim.
     cluster = jax.random.categorical(k_pair, flat[..., None, :], axis=-1,
                                      shape=(*flat.shape[:-1], m))
-    ids = _member_uniform(index, k_member, cluster)
+    draw_member = member_fn or functools.partial(_member_uniform, index)
+    ids = draw_member(k_member, cluster)
     # log q = J[c] − log|Ω(c)| − lse = s1[k1]+s2[k2] − lse
     log_q = (jnp.take_along_axis(flat, cluster, axis=-1)
              - index.log_counts.reshape(-1)[cluster] - lse)
@@ -119,7 +125,7 @@ def twostage_tables(index: MultiIndex, z: jax.Array):
 
 
 def sample_twostage(index: MultiIndex, key: jax.Array, z: jax.Array,
-                    m: int, *, tables_fn=None) -> Draw:
+                    m: int, *, tables_fn=None, member_fn=None) -> Draw:
     """Per-token fast MIDX via the paper's sequential two stages, vectorized:
     k1 ~ Cat(s1+logψ), then k2 ~ Cat(s2+log|Ω(k1,:)|), then uniform member.
     Identical distribution to `sample` (chain rule) but O(K) per draw instead
@@ -138,7 +144,8 @@ def sample_twostage(index: MultiIndex, key: jax.Array, z: jax.Array,
     l2 = s2[..., None, :] + logc_rows
     k2 = jax.random.categorical(k2_key, l2, axis=-1)           # [..., m]
     cluster = k1 * index.num_codewords + k2
-    ids = _member_uniform(index, k_member, cluster)
+    draw_member = member_fn or functools.partial(_member_uniform, index)
+    ids = draw_member(k_member, cluster)
     s1_sel = jnp.take_along_axis(s1, k1, axis=-1)
     s2_sel = jnp.take_along_axis(s2, k2, axis=-1)
     log_q = s1_sel + s2_sel - lse[..., None]
@@ -159,29 +166,30 @@ def _inverse_cdf_sample(key: jax.Array, probs: jax.Array, m: int) -> jax.Array:
 
 
 def _shared_draw(index: MultiIndex, key: jax.Array, flat_log: jax.Array,
-                 m: int) -> Draw:
+                 m: int, member_fn=None) -> Draw:
     """Sample m (cluster, member) pairs per row of flat_log [..., K²]."""
     k_pair, k_member = jax.random.split(key)
     lse = jax.nn.logsumexp(flat_log, axis=-1, keepdims=True)
     probs = jnp.exp(flat_log - lse)
     cluster = _inverse_cdf_sample(k_pair, probs, m)
-    ids = _member_uniform(index, k_member, cluster)
+    draw_member = member_fn or functools.partial(_member_uniform, index)
+    ids = draw_member(k_member, cluster)
     log_q = (jnp.take_along_axis(flat_log, cluster, axis=-1)
              - index.log_counts.reshape(-1)[cluster] - lse)
     return Draw(ids.astype(jnp.int32), log_q)
 
 
 def sample_pooled(index: MultiIndex, key: jax.Array, z_seq: jax.Array,
-                  m: int) -> Draw:
+                  m: int, *, member_fn=None) -> Draw:
     """Pooled proposal: mean query per sequence. z_seq: [B, S, D] -> [B, m]."""
     z_bar = jnp.mean(z_seq.astype(jnp.float32), axis=-2)       # [B, D]
     j, _, _ = joint_logits(index, z_bar)
     flat = j.reshape(*j.shape[:-2], -1)
-    return _shared_draw(index, key, flat, m)
+    return _shared_draw(index, key, flat, m, member_fn)
 
 
 def sample_mixture(index: MultiIndex, key: jax.Array, z_seq: jax.Array,
-                   m: int) -> Draw:
+                   m: int, *, member_fn=None) -> Draw:
     """Exact token-mixture proposal per sequence.
 
     P̄[k,k'] ∝ |Ω| ⊙ Σ_t a_t[k] b_t[k'],  a_t = exp(s1_t)/Z_t, b_t = exp(s2_t)
@@ -200,7 +208,7 @@ def sample_mixture(index: MultiIndex, key: jax.Array, z_seq: jax.Array,
     mix = jnp.einsum("bsk,bsl->bkl", a, b)                      # [B,K,K]
     mix_log = jnp.log(jnp.maximum(mix, 1e-30)) + index.log_counts
     flat_mix = mix_log.reshape(mix_log.shape[0], -1)            # [B,K²]
-    return _shared_draw(index, key, flat_mix, m)
+    return _shared_draw(index, key, flat_mix, m, member_fn)
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,56 @@ def sampled_softmax_loss(pos_logit: jax.Array, neg_logits: jax.Array,
     return jax.nn.logsumexp(all_logits, axis=-1) - pos[..., 0]
 
 
+def partial_sampled_lse(neg_logits: jax.Array, log_q: jax.Array, m: int,
+                        neg_ids: jax.Array | None = None,
+                        pos_ids: jax.Array | None = None,
+                        mask_collisions: bool = True,
+                        valid: jax.Array | None = None) -> jax.Array:
+    """Partial logsumexp over a *subset* of the corrected negatives.
+
+    `m` is the GLOBAL number of negatives (the ln M in the correction), while
+    neg_logits/log_q carry only this shard's slice; `valid` additionally masks
+    entries this shard does not own. Returns [...] with NEG_INF (not -inf)
+    when every entry is masked, so `merge_sampled_softmax_loss` can treat the
+    shard as contributing exactly zero probability mass.
+    """
+    corr = corrected_logits(neg_logits.astype(jnp.float32),
+                            log_q.astype(jnp.float32), m)
+    if mask_collisions and neg_ids is not None and pos_ids is not None:
+        hit = neg_ids == pos_ids[..., None]
+        corr = jnp.where(hit, NEG_INF, corr)
+    if valid is not None:
+        corr = jnp.where(valid, corr, NEG_INF)
+    shift = jax.lax.stop_gradient(jnp.max(corr, axis=-1, keepdims=True))
+    shift = jnp.maximum(shift, NEG_INF)                 # all-masked rows
+    term = jnp.where(corr > NEG_INF_THRESHOLD, jnp.exp(corr - shift), 0.0)
+    total = jnp.sum(term, axis=-1)
+    return jnp.where(total > 0.0,
+                     jnp.log(jnp.maximum(total, 1e-30)) + shift[..., 0],
+                     NEG_INF)
+
+
+def merge_sampled_softmax_loss(pos_logit: jax.Array,
+                               partial_lses: jax.Array) -> jax.Array:
+    """Merge per-shard partial LSEs with the positive logit into the loss.
+
+    pos_logit: [...]; partial_lses: [..., P] (stacked over shards/parts, with
+    NEG_INF marking empty shards). Implements the same reassociated
+    logsumexp as dist/decode.py's flash-decode merge:
+        m = max(pos, max_p lse_p);  l = e^{pos-m} + Σ_p e^{lse_p-m}
+        loss = m + log l − pos
+    and equals `sampled_softmax_loss` on the concatenated negatives up to
+    fp reassociation (≤1e-5). The shift is stop_gradient'd so gradients are
+    the exact softmax weights.
+    """
+    pos = pos_logit.astype(jnp.float32)[..., None]
+    allv = jnp.concatenate([pos, partial_lses.astype(jnp.float32)], axis=-1)
+    shift = jax.lax.stop_gradient(jnp.max(allv, axis=-1, keepdims=True))
+    term = jnp.where(allv > NEG_INF_THRESHOLD, jnp.exp(allv - shift), 0.0)
+    total = jnp.sum(term, axis=-1)
+    return jnp.log(jnp.maximum(total, 1e-30)) + shift[..., 0] - pos[..., 0]
+
+
 def full_softmax_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
     """Reference full CE. logits [..., N], labels [...] -> [...]"""
     logits = logits.astype(jnp.float32)

@@ -12,12 +12,20 @@ optim.opt_state_specs (ZeRO-1).
 """
 from repro.dist.sharding import (param_specs, zero1_specs, batch_spec,
                                  index_specs, decode_cache_specs,
-                                 refresh_table_spec)
+                                 refresh_table_spec, refresh_rows_per_shard,
+                                 head_table_spec, vocab_param_specs,
+                                 vocab_index_specs)
 from repro.dist.collectives import psum_bf16, psum_int8_ef, all_gather_rows
 from repro.dist.decode import flash_decode_seq_sharded
+from repro.dist.vocab_parallel import (VocabShardedIndex, shard_index,
+                                       local_index, embed_lookup,
+                                       loss_midx_vp, sample_twostage_vp)
 
 __all__ = [
     "param_specs", "zero1_specs", "batch_spec", "index_specs",
-    "decode_cache_specs", "refresh_table_spec", "psum_bf16", "psum_int8_ef",
-    "all_gather_rows", "flash_decode_seq_sharded",
+    "decode_cache_specs", "refresh_table_spec", "refresh_rows_per_shard",
+    "head_table_spec", "vocab_param_specs", "vocab_index_specs",
+    "psum_bf16", "psum_int8_ef", "all_gather_rows",
+    "flash_decode_seq_sharded", "VocabShardedIndex", "shard_index",
+    "local_index", "embed_lookup", "loss_midx_vp", "sample_twostage_vp",
 ]

@@ -148,15 +148,68 @@ def refresh_table_spec(*, padded_vocab: int, dp: int,
     The refresh step (`launch.steps.make_refresh_step`) slices the [Vpad, D]
     class table over the data axes so each shard quantizes only its rows —
     K-means sufficient statistics psum, assignments all-gather, CSR rebuilt
-    replicated (`repro.index.sharded`). Falls back to replicated (P()) when
-    the padded vocab does not divide the data degree, in which case the
-    refresh runs the single-device path on every shard redundantly, exactly
-    as before.
+    replicated (`repro.index.sharded`). A non-dividing padded vocab no
+    longer falls back to replicated: the refresh step pads the table rows up
+    to ceil(Vpad/dp)·dp and masks the pad rows out of the K-means statistics
+    (`refresh_rows_per_shard` gives the per-shard row count), so the only
+    replicated case left is dp == 1.
     """
     axes = tuple(data_axes)
-    if dp <= 1 or padded_vocab % dp:
+    if dp <= 1:
         return P()
     return P(axes if len(axes) > 1 else axes[0])
+
+
+def refresh_rows_per_shard(padded_vocab: int, dp: int) -> int:
+    """Rows each shard owns during a sharded refresh: ceil division — the
+    last shard's tail rows are pad-and-masked, never silently replicated."""
+    return -(-padded_vocab // max(dp, 1))
+
+
+def head_table_spec(*, padded_vocab: int, vp: int,
+                    vocab_axis: str = "vocab") -> P:
+    """Row spec of the [Vpad, D] class table under vocab parallelism.
+
+    Unlike the tp fallback rules, divisibility is a hard requirement here —
+    the vocab-parallel loss and index own contiguous row ranges, and
+    `vocab_pad_multiple` makes Vpad % vp == 0 free to arrange."""
+    if vp <= 1:
+        return P()
+    if padded_vocab % vp:
+        raise ValueError(
+            f"padded_vocab {padded_vocab} must divide --vocab-parallel {vp}; "
+            f"raise cfg.vocab_pad_multiple to a multiple of {vp}")
+    return P(vocab_axis, None)
+
+
+def vocab_param_specs(cfg, params_abs, *, vp: int,
+                      vocab_axis: str = "vocab"):
+    """Param specs for the vocab-parallel train step: the top-level class
+    tables (embed / head) row-shard over the vocab axis, everything else is
+    replicated (vp composes with data parallelism, not tensor parallelism)."""
+    del cfg
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if name in _VOCAB_PARALLEL and len(names) == 1 and leaf.ndim == 2:
+            return head_table_spec(padded_vocab=leaf.shape[0], vp=vp,
+                                   vocab_axis=vocab_axis)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(one, params_abs)
+
+
+def vocab_index_specs(sharded_abs, vocab_axis: str = "vocab"):
+    """Specs for a dist.vocab_parallel.VocabShardedIndex: the tiny codebooks
+    replicate, every stacked [n, ...] CSR leaf splits its shard dim over the
+    vocab axis (each device sees its own [1, ...] slice inside shard_map)."""
+    import dataclasses as _dc
+    return _dc.replace(
+        jax.tree_util.tree_map(lambda leaf: P(vocab_axis,
+                                              *([None] * (leaf.ndim - 1))),
+                               sharded_abs),
+        codebook1=P(), codebook2=P())
 
 
 def decode_cache_specs(cfg, cache_abs, *, tp: int, multi_pod: bool,

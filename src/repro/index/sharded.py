@@ -61,13 +61,22 @@ def _gather_global_rows(x_local: jax.Array, idx: jax.Array, axis,
 
 
 def kmeans_sharded(key: jax.Array, x_local: jax.Array, k: int, iters: int,
-                   *, axis, init: Optional[jax.Array] = None):
+                   *, axis, init: Optional[jax.Array] = None,
+                   valid: Optional[jax.Array] = None,
+                   n_valid: Optional[int] = None):
     """Lloyd's over a row-sharded table. Returns (centroids [K, D] —
-    identical on every shard — local assignments [rows], distortion)."""
+    identical on every shard — local assignments [rows], distortion).
+
+    valid/n_valid support the pad-and-mask path for a padded vocab that does
+    not divide the shard count: `valid` [rows] masks this shard's pad rows
+    out of the sufficient statistics and `n_valid` (global real-row count)
+    bounds the init / repair row draws. When omitted the code path — and its
+    random-bit consumption — is bitwise identical to the unmasked version.
+    """
     rows, _d = x_local.shape
     dp = _axis_size(axis)
     shard = _linear_index(axis)
-    n_global = rows * dp
+    n_global = n_valid if n_valid is not None else rows * dp
     init_key, loop_key = jax.random.split(key)
     if init is None:
         init_idx = jax.random.choice(init_key, n_global, (k,),
@@ -79,6 +88,8 @@ def kmeans_sharded(key: jax.Array, x_local: jax.Array, k: int, iters: int,
     def body(centroids, key_t):
         assign = _assign(x_local, centroids)
         one_hot = jax.nn.one_hot(assign, k, dtype=x_local.dtype)
+        if valid is not None:
+            one_hot = one_hot * valid[:, None].astype(one_hot.dtype)
         counts = jax.lax.psum(jnp.sum(one_hot, axis=0), axis)        # [K]
         sums = jax.lax.psum(one_hot.T @ x_local, axis)               # [K, D]
         centroids = sums / jnp.maximum(counts, 1.0)[:, None]
@@ -90,41 +101,52 @@ def kmeans_sharded(key: jax.Array, x_local: jax.Array, k: int, iters: int,
     centroids, _ = jax.lax.scan(body, centroids0, keys)
     assign = _assign(x_local, centroids)
     diff = x_local - centroids[assign]
+    if valid is not None:
+        diff = diff * valid[:, None].astype(diff.dtype)
     distortion = jax.lax.psum(jnp.sum(diff * diff), axis) / n_global
     return centroids, assign, distortion
 
 
 def _fit_assign_sharded(kind: str, key: jax.Array, q_local: jax.Array, k: int,
-                        iters: int, *, axis, init=None):
+                        iters: int, *, axis, init=None, valid=None,
+                        n_valid=None):
     """Sharded fit: returns (cb1, cb2, a1_local, a2_local)."""
     k1_key, k2_key = jax.random.split(key)
     i1, i2 = (None, None) if init is None else init
     if kind == "pq":
         d = q_local.shape[-1]
         cb1, a1, _ = kmeans_sharded(k1_key, q_local[:, : d // 2], k, iters,
-                                    axis=axis, init=i1)
+                                    axis=axis, init=i1, valid=valid,
+                                    n_valid=n_valid)
         cb2, a2, _ = kmeans_sharded(k2_key, q_local[:, d // 2:], k, iters,
-                                    axis=axis, init=i2)
+                                    axis=axis, init=i2, valid=valid,
+                                    n_valid=n_valid)
     else:
         cb1, a1, _ = kmeans_sharded(k1_key, q_local, k, iters,
-                                    axis=axis, init=i1)
+                                    axis=axis, init=i1, valid=valid,
+                                    n_valid=n_valid)
         resid1 = q_local - cb1[a1]
         cb2, a2, _ = kmeans_sharded(k2_key, resid1, k, iters,
-                                    axis=axis, init=i2)
+                                    axis=axis, init=i2, valid=valid,
+                                    n_valid=n_valid)
     return cb1, cb2, a1, a2
 
 
 def _assemble(index: MultiIndex, cb1, cb2, a1_local, a2_local, axis,
-              d_model: int) -> MultiIndex:
+              d_model: int, n_valid: Optional[int] = None) -> MultiIndex:
     """All-gather shard assignments and rebuild the CSR layout replicated.
 
     The sharded path never materializes residuals — it exists for the
-    training head state, which drops them (the §4 replication contract)."""
+    training head state, which drops them (the §4 replication contract).
+    `n_valid` drops the pad-and-mask tail rows a non-dividing vocab adds."""
     # deferred import: repro.dist pulls in the model zoo, which itself
     # imports repro.index through the core shims at module-load time
     from repro.dist.collectives import all_gather_rows
     a1 = all_gather_rows(a1_local, axis)
     a2 = all_gather_rows(a2_local, axis)
+    if n_valid is not None:
+        a1 = a1[:n_valid]
+        a2 = a2[:n_valid]
     sorted_ids, offsets, counts, log_counts = _csr_from_assignments(
         a1, a2, index.num_codewords)
     return MultiIndex(index.kind, cb1, cb2, a1, a2,
@@ -134,7 +156,7 @@ def _assemble(index: MultiIndex, cb1, cb2, a1_local, a2_local, axis,
 
 def refresh_sharded(index: MultiIndex, key: jax.Array, table_local: jax.Array,
                     *, axis, iters: int = 10, policy: str = "fixed",
-                    threshold: float = 0.1):
+                    threshold: float = 0.1, n_valid: Optional[int] = None):
     """One refresh over a row-sharded class table. Runs inside shard_map;
     `table_local` is this shard's contiguous row slice (row-major over the
     linearized data axes). Returns (new_index, metrics) with the index
@@ -143,7 +165,13 @@ def refresh_sharded(index: MultiIndex, key: jax.Array, table_local: jax.Array,
     'fixed' always runs the warm-started sharded refit; 'drift' runs the
     frozen-codebook reassign and escalates to the refit through lax.cond —
     the predicate is psum-derived, hence identical on every shard, so the
-    collectives inside the branch stay coherent."""
+    collectives inside the branch stay coherent.
+
+    n_valid (global real-row count) enables the pad-and-mask path when the
+    padded vocab does not divide the shard count: the caller zero-pads the
+    table to rows*dp, the tail pad rows are masked out of every statistic,
+    and `_assemble` slices the all-gathered assignments back to [n_valid].
+    Omitted (the divisible case) the computation is bitwise unchanged."""
     if policy not in REFRESH_POLICIES:
         raise ValueError(f"refresh_policy must be one of {REFRESH_POLICIES}, "
                          f"got {policy!r}")
@@ -151,7 +179,10 @@ def refresh_sharded(index: MultiIndex, key: jax.Array, table_local: jax.Array,
     dp = _axis_size(axis)
     shard = _linear_index(axis)
     rows = table_local.shape[0]
-    n_global = rows * dp
+    n_global = n_valid if n_valid is not None else rows * dp
+    valid = None
+    if n_valid is not None:
+        valid = shard * rows + jnp.arange(rows) < n_valid
     k_drift, k_fit = jax.random.split(key)
 
     # drift probe (shared by both policies; 'fixed' logs it for free) —
@@ -160,14 +191,25 @@ def refresh_sharded(index: MultiIndex, key: jax.Array, table_local: jax.Array,
     # takes the same branch on either path
     a1_frozen, a2_frozen = assign_against(index.kind, index.codebook1,
                                           index.codebook2, table_local)
-    old_a1 = jax.lax.dynamic_slice_in_dim(index.assign1, shard * rows, rows)
-    old_a2 = jax.lax.dynamic_slice_in_dim(index.assign2, shard * rows, rows)
+    # old assignments are [n_valid] global; pad to rows*dp so the last
+    # shard's slice stays in bounds (its tail is masked anyway)
+    old1, old2 = index.assign1, index.assign2
+    if n_valid is not None and rows * dp != n_valid:
+        pad = rows * dp - n_valid
+        old1 = jnp.pad(old1, (0, pad))
+        old2 = jnp.pad(old2, (0, pad))
+    old_a1 = jax.lax.dynamic_slice_in_dim(old1, shard * rows, rows)
+    old_a2 = jax.lax.dynamic_slice_in_dim(old2, shard * rows, rows)
     changed = (a1_frozen != old_a1) | (a2_frozen != old_a2)
+    if valid is not None:
+        changed = changed & valid
     frac = jax.lax.psum(jnp.sum(changed.astype(jnp.float32)), axis) / n_global
     k = index.num_codewords
     x1 = (table_local[:, : d_model // 2] if index.kind == "pq"
           else table_local)
     oh = jax.nn.one_hot(a1_frozen, k, dtype=x1.dtype)
+    if valid is not None:
+        oh = oh * valid[:, None].astype(oh.dtype)
     counts = jax.lax.psum(jnp.sum(oh, axis=0), axis)
     sums = jax.lax.psum(oh.T @ x1, axis)
     cb1_next = jnp.where((counts > 0)[:, None],
@@ -180,7 +222,8 @@ def refresh_sharded(index: MultiIndex, key: jax.Array, table_local: jax.Array,
     def full(_):
         cb1, cb2, a1, a2 = _fit_assign_sharded(
             index.kind, k_fit, table_local, k, iters, axis=axis,
-            init=(index.codebook1, index.codebook2))
+            init=(index.codebook1, index.codebook2), valid=valid,
+            n_valid=n_valid)
         return cb1, cb2, a1, a2, jnp.float32(1.0)
 
     def cheap(_):
@@ -192,10 +235,103 @@ def refresh_sharded(index: MultiIndex, key: jax.Array, table_local: jax.Array,
     else:
         do_full = (frac > threshold) | (move > threshold)
         cb1, cb2, a1, a2, did_full = jax.lax.cond(do_full, full, cheap, None)
-    new_index = _assemble(index, cb1, cb2, a1, a2, axis, d_model)
+    new_index = _assemble(index, cb1, cb2, a1, a2, axis, d_model,
+                          n_valid=n_valid)
     recon_local = (jnp.concatenate([cb1[a1], cb2[a2]], axis=-1)
                    if index.kind == "pq" else cb1[a1] + cb2[a2])
+    diff2 = (table_local - recon_local) ** 2
+    if valid is not None:
+        diff2 = diff2 * valid[:, None].astype(diff2.dtype)
+    distortion = jax.lax.psum(jnp.sum(diff2), axis) / n_global
+    metrics = {**drift, "did_full": did_full, "distortion": distortion}
+    return new_index, metrics
+
+
+# ---------------------------------------------------------------------------
+# vocab-parallel subindex build/refresh: the CSR state never all-gathers
+# ---------------------------------------------------------------------------
+
+def build_vocab_sharded(key: jax.Array, table_local: jax.Array, *, kind: str,
+                        k: int, iters: int, axis):
+    """Fit codebooks over the vocab-sharded table and build this shard's
+    subindex NATIVELY (DESIGN §9): the K-means statistics travel by psum so
+    codebooks come out identical on every shard, but — unlike `_assemble` —
+    the assignments never all-gather. Each shard builds a local CSR over its
+    own rows (`sorted_ids` hold LOCAL row ids), which is exactly the
+    per-shard layout `dist.vocab_parallel.VocabShardedIndex` stacks: the
+    stable argsort + contiguous row ownership make concat_p(local CSR_p)
+    equal the replicated CSR cluster by cluster.
+
+    Runs inside shard_map over the vocab axis. Returns per-shard leaves
+    (cb1, cb2, a1, a2, sorted_ids, offsets, counts, log_counts); out_specs
+    P(vocab) on the CSR leaves re-add the leading shard dim."""
+    cb1, cb2, a1, a2 = _fit_assign_sharded(kind, key, table_local, k, iters,
+                                           axis=axis)
+    sorted_ids, offsets, counts, log_counts = _csr_from_assignments(a1, a2, k)
+    return cb1, cb2, a1, a2, sorted_ids, offsets, counts, log_counts
+
+
+def refresh_vocab_sharded(local_index: MultiIndex, key: jax.Array,
+                          table_local: jax.Array, *, axis,
+                          iters: int = 10, policy: str = "fixed",
+                          threshold: float = 0.1):
+    """Vocab-parallel analogue of `refresh_sharded`: same psum'd drift probe
+    and warm-started sharded refit, but the rebuilt CSR stays local to each
+    shard (no all-gather — `build_vocab_sharded`'s layout). `local_index` is
+    this shard's view (`dist.vocab_parallel.local_index`): its assign1/2 are
+    the shard's own rows, so the drift probe needs no slicing.
+
+    Returns ((cb1, cb2, a1, a2, sorted_ids, offsets, counts, log_counts),
+    metrics)."""
+    if policy not in REFRESH_POLICIES:
+        raise ValueError(f"refresh_policy must be one of {REFRESH_POLICIES}, "
+                         f"got {policy!r}")
+    d_model = table_local.shape[-1]
+    dp = _axis_size(axis)
+    rows = table_local.shape[0]
+    n_global = rows * dp
+    k_drift, k_fit = jax.random.split(key)
+
+    a1_frozen, a2_frozen = assign_against(local_index.kind,
+                                          local_index.codebook1,
+                                          local_index.codebook2, table_local)
+    changed = ((a1_frozen != local_index.assign1)
+               | (a2_frozen != local_index.assign2))
+    frac = jax.lax.psum(jnp.sum(changed.astype(jnp.float32)), axis) / n_global
+    k = local_index.num_codewords
+    x1 = (table_local[:, : d_model // 2] if local_index.kind == "pq"
+          else table_local)
+    oh = jax.nn.one_hot(a1_frozen, k, dtype=x1.dtype)
+    counts = jax.lax.psum(jnp.sum(oh, axis=0), axis)
+    sums = jax.lax.psum(oh.T @ x1, axis)
+    cb1_next = jnp.where((counts > 0)[:, None],
+                         sums / jnp.maximum(counts, 1.0)[:, None],
+                         local_index.codebook1)
+    move = (jnp.sqrt(jnp.sum((cb1_next - local_index.codebook1) ** 2))
+            / (jnp.sqrt(jnp.sum(local_index.codebook1 ** 2)) + 1e-12))
+    drift = {"reassigned_frac": frac, "codeword_drift": move}
+
+    def full(_):
+        cb1, cb2, a1, a2 = _fit_assign_sharded(
+            local_index.kind, k_fit, table_local, k, iters, axis=axis,
+            init=(local_index.codebook1, local_index.codebook2))
+        return cb1, cb2, a1, a2, jnp.float32(1.0)
+
+    def cheap(_):
+        return (local_index.codebook1, local_index.codebook2,
+                a1_frozen, a2_frozen, jnp.float32(0.0))
+
+    if policy == "fixed":
+        cb1, cb2, a1, a2, did_full = full(None)
+    else:
+        do_full = (frac > threshold) | (move > threshold)
+        cb1, cb2, a1, a2, did_full = jax.lax.cond(do_full, full, cheap, None)
+    sorted_ids, offsets, counts_csr, log_counts = _csr_from_assignments(
+        a1, a2, k)
+    recon_local = (jnp.concatenate([cb1[a1], cb2[a2]], axis=-1)
+                   if local_index.kind == "pq" else cb1[a1] + cb2[a2])
     distortion = jax.lax.psum(
         jnp.sum((table_local - recon_local) ** 2), axis) / n_global
     metrics = {**drift, "did_full": did_full, "distortion": distortion}
-    return new_index, metrics
+    return (cb1, cb2, a1, a2, sorted_ids, offsets, counts_csr,
+            log_counts), metrics

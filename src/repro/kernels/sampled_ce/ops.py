@@ -78,3 +78,76 @@ def _pt_bwd(interpret, block_t, chunk, res, g):
 
 
 sampled_ce_pt_op.defvjp(_pt_fwd, _pt_bwd)
+
+
+# ---------------------------------------------------------------------------
+# partial (include_pos=False) variants for the vocab-parallel head: each op
+# returns this shard's negatives-only partial lse [T]. The saved residual is
+# the PARTIAL lse, so the in-kernel softmax weights are exp(corr − partial);
+# the upstream LSE merge (core.sampled_softmax.merge_sampled_softmax_loss)
+# supplies a cotangent carrying exp(partial − lse_global), and the chain rule
+# composes the two into the exact global weights. num_neg is the GLOBAL M.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def sampled_ce_partial_op(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids,
+                          num_neg: int, interpret: bool = False):
+    """Shared-negative partial lse. Shapes as sampled_ce_op -> lse [T] fp32.
+    pos_emb/pos_ids only collision-mask (pass zeros / local-or--1 ids)."""
+    _, lse = sampled_ce(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids,
+                        interpret=interpret, include_pos=False,
+                        num_neg=num_neg)
+    return lse
+
+
+def _partial_fwd(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, num_neg,
+                 interpret):
+    lse = sampled_ce_partial_op(hidden, pos_emb, neg_emb, log_q, neg_ids,
+                                pos_ids, num_neg, interpret)
+    return lse, (hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, lse)
+
+
+def _partial_bwd(num_neg, interpret, res, g):
+    hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, lse = res
+    dh, dpe, dne, dlq = sampled_ce_bwd(g, hidden, pos_emb, neg_emb, log_q,
+                                       neg_ids, pos_ids, lse,
+                                       interpret=interpret, include_pos=False,
+                                       num_neg=num_neg)
+    return (dh.astype(hidden.dtype), dpe.astype(pos_emb.dtype),
+            dne.astype(neg_emb.dtype), dlq.astype(log_q.dtype), None, None)
+
+
+sampled_ce_partial_op.defvjp(_partial_fwd, _partial_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def sampled_ce_pt_partial_op(hidden, table, log_q, neg_ids, pos_ids,
+                             num_neg: int, interpret: bool = False,
+                             block_t: int = 128, chunk: int = 8):
+    """Per-token partial lse. table is this shard's row slice; neg_ids are
+    LOCAL rows (non-owned clipped + log_q=-NEG_INF); pos_ids local-or--1.
+    -> partial lse [T] fp32."""
+    _, lse = sampled_ce_pt(hidden, table, log_q, neg_ids, pos_ids,
+                           block_t=block_t, chunk=chunk, interpret=interpret,
+                           include_pos=False, num_neg=num_neg)
+    return lse
+
+
+def _pt_partial_fwd(hidden, table, log_q, neg_ids, pos_ids, num_neg,
+                    interpret, block_t, chunk):
+    lse = sampled_ce_pt_partial_op(hidden, table, log_q, neg_ids, pos_ids,
+                                   num_neg, interpret, block_t, chunk)
+    return lse, (hidden, table, log_q, neg_ids, pos_ids, lse)
+
+
+def _pt_partial_bwd(num_neg, interpret, block_t, chunk, res, g):
+    hidden, table, log_q, neg_ids, pos_ids, lse = res
+    dh, dtab, dlq = sampled_ce_pt_bwd(g, hidden, table, log_q, neg_ids,
+                                      pos_ids, lse, block_t=block_t,
+                                      chunk=chunk, interpret=interpret,
+                                      include_pos=False, num_neg=num_neg)
+    return (dh.astype(hidden.dtype), dtab.astype(table.dtype), dlq,
+            None, None)
+
+
+sampled_ce_pt_partial_op.defvjp(_pt_partial_fwd, _pt_partial_bwd)

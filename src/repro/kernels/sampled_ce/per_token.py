@@ -62,7 +62,8 @@ def _corrected(logits, lq_c, nid_c, pid, num_neg: int):
 # ---------------------------------------------------------------------------
 
 def _fwd_kernel(h_ref, lq_ref, nid_ref, pid_ref, tab_ref, loss_ref, lse_ref,
-                rows, prow, sem, psem, *, num_neg: int, chunk: int):
+                rows, prow, sem, psem, *, num_neg: int, chunk: int,
+                include_pos: bool = True):
     h = h_ref[...].astype(jnp.float32)                   # [Tb, D]
     lq = lq_ref[...]
     nid = nid_ref[...]
@@ -70,10 +71,11 @@ def _fwd_kernel(h_ref, lq_ref, nid_ref, pid_ref, tab_ref, loss_ref, lse_ref,
 
     def token(t, _):
         pid = pid_ref[t]
-        pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).start()
-        pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).wait()
         h_t = h[t]                                       # [D]
-        pos_logit = jnp.sum(h_t * prow[0, :].astype(jnp.float32))
+        if include_pos:
+            pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).start()
+            pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).wait()
+            pos_logit = jnp.sum(h_t * prow[0, :].astype(jnp.float32))
 
         def chunk_body(c, carry):
             m_acc, l_acc = carry
@@ -93,23 +95,39 @@ def _fwd_kernel(h_ref, lq_ref, nid_ref, pid_ref, tab_ref, loss_ref, lse_ref,
         m_f, l_f = jax.lax.fori_loop(
             0, n_chunks, chunk_body,
             (jnp.float32(NEG_INF), jnp.float32(0.0)))
-        m_fin = jnp.maximum(m_f, pos_logit)
-        l_fin = l_f * jnp.exp(m_f - m_fin) + jnp.exp(pos_logit - m_fin)
-        lse = jnp.log(jnp.maximum(l_fin, 1e-30)) + m_fin
-        loss_ref[t, 0] = lse - pos_logit
-        lse_ref[t, 0] = lse
+        if include_pos:
+            m_fin = jnp.maximum(m_f, pos_logit)
+            l_fin = l_f * jnp.exp(m_f - m_fin) + jnp.exp(pos_logit - m_fin)
+            lse = jnp.log(jnp.maximum(l_fin, 1e-30)) + m_fin
+            loss_ref[t, 0] = lse - pos_logit
+            lse_ref[t, 0] = lse
+        else:
+            # partial mode: negatives-only lse (pid only collision-masks;
+            # its row is never DMA'd, so pid == -1 off-owner is safe).
+            lse = jnp.log(jnp.maximum(l_f, 1e-30)) + m_f
+            loss_ref[t, 0] = lse
+            lse_ref[t, 0] = lse
         return 0
 
     jax.lax.fori_loop(0, h.shape[0], token, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "chunk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_t", "chunk", "interpret",
+                                             "include_pos", "num_neg"))
 def sampled_ce_pt(hidden: jax.Array, table: jax.Array, log_q: jax.Array,
                   neg_ids: jax.Array, pos_ids: jax.Array, *,
                   block_t: int = 128, chunk: int = 8,
-                  interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+                  interpret: bool = False, include_pos: bool = True,
+                  num_neg: int | None = None) -> tuple[jax.Array, jax.Array]:
     """hidden [T,D] fp32; table [V,D] native dtype; log_q/neg_ids [T,M];
-    pos_ids [T] -> (loss [T], lse [T]) fp32. Arbitrary T and M (padded)."""
+    pos_ids [T] -> (loss [T], lse [T]) fp32. Arbitrary T and M (padded).
+
+    include_pos=False: partial mode for the vocab-parallel head. `table` is
+    this shard's row slice, neg_ids are LOCAL row indices (non-owned entries
+    clipped in-range and invalidated via log_q = -NEG_INF), pos_ids is the
+    local positive row on the owner shard and -1 elsewhere, and `num_neg`
+    gives the GLOBAL negative count for the ln(M·q) correction. Both outputs
+    are the negatives-only partial lse."""
     t, d = hidden.shape
     m = neg_ids.shape[-1]
     block_t = min(block_t, t)
@@ -120,7 +138,8 @@ def sampled_ce_pt(hidden: jax.Array, table: jax.Array, log_q: jax.Array,
     log_q = _pad_dim(log_q, chunk, axis=1, fill=-NEG_INF)  # invalidated cols
     neg_ids = _pad_dim(_pad_dim(neg_ids, block_t), chunk, axis=1)
     tp, mp = hidden.shape[0], log_q.shape[1]
-    kernel = functools.partial(_fwd_kernel, num_neg=m, chunk=chunk)
+    kernel = functools.partial(_fwd_kernel, num_neg=num_neg or m, chunk=chunk,
+                               include_pos=include_pos)
     loss, lse = pl.pallas_call(
         kernel,
         grid=(tp // block_t,),
@@ -157,7 +176,7 @@ def sampled_ce_pt(hidden: jax.Array, table: jax.Array, log_q: jax.Array,
 def _bwd_kernel(g_ref, h_ref, lq_ref, nid_ref, pid_ref, lse_ref, tab_ref,
                 dtab_in_ref, dh_ref, dlq_ref, dtab_ref,
                 rows, prow, arow, sem, psem, asem, *,
-                num_neg: int, chunk: int):
+                num_neg: int, chunk: int, include_pos: bool = True):
     del dtab_in_ref  # aliased with dtab_ref; zeros provided by the wrapper
     h = h_ref[...].astype(jnp.float32)                   # [Tb, D]
     lq = lq_ref[...]
@@ -176,14 +195,20 @@ def _bwd_kernel(g_ref, h_ref, lq_ref, nid_ref, pid_ref, lse_ref, tab_ref,
         g = g_ref[t, 0]
         lse = lse_ref[t, 0]
         pid = pid_ref[t]
-        pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).start()
-        pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).wait()
         h_t = h[t]
-        pe = prow[0, :].astype(jnp.float32)
-        pos_logit = jnp.sum(h_t * pe)
-        p_pos = jnp.exp(pos_logit - lse)
-        coeff_pos = g * (p_pos - 1.0)                    # dloss/dpos_logit · g
-        rmw_row(pid, coeff_pos * h_t)
+        if include_pos:
+            pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).start()
+            pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).wait()
+            pe = prow[0, :].astype(jnp.float32)
+            pos_logit = jnp.sum(h_t * pe)
+            p_pos = jnp.exp(pos_logit - lse)
+            coeff_pos = g * (p_pos - 1.0)                # dloss/dpos_logit · g
+            rmw_row(pid, coeff_pos * h_t)
+            dh_init = coeff_pos * pe
+        else:
+            # partial mode: no pos terms; pid (-1 off-owner) is never used
+            # as a row index. lse here is the PARTIAL lse residual.
+            dh_init = jnp.zeros_like(h_t)
 
         def chunk_body(c, dh_t):
             base = c * chunk
@@ -201,21 +226,24 @@ def _bwd_kernel(g_ref, h_ref, lq_ref, nid_ref, pid_ref, lse_ref, tab_ref,
                 rmw_row(nid[t, base + j], g * w[j] * h_t)
             return dh_t
 
-        dh_t = jax.lax.fori_loop(0, n_chunks, chunk_body, coeff_pos * pe)
+        dh_t = jax.lax.fori_loop(0, n_chunks, chunk_body, dh_init)
         dh_ref[t, :] = dh_t
         return 0
 
     jax.lax.fori_loop(0, h.shape[0], token, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "chunk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_t", "chunk", "interpret",
+                                             "include_pos", "num_neg"))
 def sampled_ce_pt_bwd(g: jax.Array, hidden: jax.Array, table: jax.Array,
                       log_q: jax.Array, neg_ids: jax.Array,
                       pos_ids: jax.Array, lse: jax.Array, *,
                       block_t: int = 128, chunk: int = 8,
-                      interpret: bool = False):
+                      interpret: bool = False, include_pos: bool = True,
+                      num_neg: int | None = None):
     """Fused backward. g/lse [T]; others as sampled_ce_pt.
-    -> (dh [T,D] fp32, dtab [V,D] fp32, dlq [T,M] fp32)."""
+    -> (dh [T,D] fp32, dtab [V,D] fp32, dlq [T,M] fp32).
+    include_pos=False: lse is the PARTIAL lse; no pos scatter or dh init."""
     t, d = hidden.shape
     v = table.shape[0]
     m = neg_ids.shape[-1]
@@ -229,7 +257,8 @@ def sampled_ce_pt_bwd(g: jax.Array, hidden: jax.Array, table: jax.Array,
     log_q = _pad_dim(log_q, chunk, axis=1, fill=-NEG_INF)
     neg_ids = _pad_dim(_pad_dim(neg_ids, block_t), chunk, axis=1)
     tp, mp = hidden.shape[0], log_q.shape[1]
-    kernel = functools.partial(_bwd_kernel, num_neg=m, chunk=chunk)
+    kernel = functools.partial(_bwd_kernel, num_neg=num_neg or m, chunk=chunk,
+                               include_pos=include_pos)
     dh, dlq, dtab = pl.pallas_call(
         kernel,
         grid=(tp // block_t,),

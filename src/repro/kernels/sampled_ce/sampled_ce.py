@@ -31,7 +31,7 @@ from repro.core.sampled_softmax import NEG_INF, NEG_INF_THRESHOLD
 
 
 def _kernel(h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref, loss_ref,
-            lse_ref, m_ref, l_ref, *, num_neg: int):
+            lse_ref, m_ref, l_ref, *, num_neg: int, include_pos: bool = True):
     im = pl.program_id(1)
     nm = pl.num_programs(1)
 
@@ -61,14 +61,22 @@ def _kernel(h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref, loss_ref,
 
     @pl.when(im == nm - 1)
     def _finish():
-        pe = pe_ref[...].astype(jnp.float32)             # [Tb, D]
-        pos_logit = jnp.sum(h * pe, axis=-1, keepdims=True)        # [Tb,1]
-        m_fin = jnp.maximum(m_ref[...], pos_logit)
-        l_fin = (l_ref[...] * jnp.exp(m_ref[...] - m_fin)
-                 + jnp.exp(pos_logit - m_fin))
-        lse = jnp.log(jnp.maximum(l_fin, 1e-30)) + m_fin
-        loss_ref[...] = lse - pos_logit
-        lse_ref[...] = lse
+        if include_pos:
+            pe = pe_ref[...].astype(jnp.float32)         # [Tb, D]
+            pos_logit = jnp.sum(h * pe, axis=-1, keepdims=True)    # [Tb,1]
+            m_fin = jnp.maximum(m_ref[...], pos_logit)
+            l_fin = (l_ref[...] * jnp.exp(m_ref[...] - m_fin)
+                     + jnp.exp(pos_logit - m_fin))
+            lse = jnp.log(jnp.maximum(l_fin, 1e-30)) + m_fin
+            loss_ref[...] = lse - pos_logit
+            lse_ref[...] = lse
+        else:
+            # partial mode (vocab-parallel shard): no positive join — emit
+            # the negatives-only partial lse; an all-masked block lands at
+            # ~NEG_INF, which the cross-shard merge treats as zero mass.
+            lse = jnp.log(jnp.maximum(l_ref[...], 1e-30)) + m_ref[...]
+            loss_ref[...] = lse
+            lse_ref[...] = lse
 
 
 def _pad_dim(x: jax.Array, mult: int, axis: int = 0, fill=0):
@@ -94,14 +102,21 @@ def _padded(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, block_t,
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_m",
-                                             "interpret"))
+                                             "interpret", "include_pos",
+                                             "num_neg"))
 def sampled_ce(hidden: jax.Array, pos_emb: jax.Array, neg_emb: jax.Array,
                log_q: jax.Array, neg_ids: jax.Array, pos_ids: jax.Array, *,
                block_t: int = 256, block_m: int = 256,
-               interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+               interpret: bool = False, include_pos: bool = True,
+               num_neg: int | None = None) -> tuple[jax.Array, jax.Array]:
     """hidden/pos_emb [T,D]; neg_emb [M,D]; log_q/neg_ids [M]; pos_ids [T]
     -> (loss [T], lse [T]) fp32; lse is the fused backward's residual.
-    T and M may be arbitrary (padded to blocks here)."""
+    T and M may be arbitrary (padded to blocks here).
+
+    include_pos=False: partial mode for the vocab-parallel head — the
+    positive never joins, both outputs are the negatives-only partial lse,
+    and `num_neg` gives the GLOBAL negative count for the ln(M·q) correction
+    (defaults to this shard's M)."""
     t, d = hidden.shape
     m = neg_emb.shape[0]
     block_t, block_m = min(block_t, t), min(block_m, m)
@@ -109,7 +124,8 @@ def sampled_ce(hidden: jax.Array, pos_emb: jax.Array, neg_emb: jax.Array,
         hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, block_t, block_m)
     tp, mp = hidden.shape[0], neg_emb.shape[0]
     grid = (tp // block_t, mp // block_m)
-    kernel = functools.partial(_kernel, num_neg=m)
+    kernel = functools.partial(_kernel, num_neg=num_neg or m,
+                               include_pos=include_pos)
     loss, lse = pl.pallas_call(
         kernel,
         grid=grid,
@@ -160,7 +176,8 @@ def _w_block(h, ne_ref, lq_ref, nid_ref, pid_ref, lse, *, num_neg: int):
 
 
 def _bwd_dh_kernel(g_ref, h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref,
-                   lse_ref, dh_ref, dpe_ref, acc_ref, *, num_neg: int):
+                   lse_ref, dh_ref, dpe_ref, acc_ref, *, num_neg: int,
+                   include_pos: bool = True):
     im = pl.program_id(1)
     nm = pl.num_programs(1)
 
@@ -177,11 +194,16 @@ def _bwd_dh_kernel(g_ref, h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref,
     @pl.when(im == nm - 1)
     def _finish():
         g = g_ref[...]                                   # [Tb, 1]
-        pe = pe_ref[...].astype(jnp.float32)
-        pos_logit = jnp.sum(h * pe, axis=-1, keepdims=True)
-        p_pos = jnp.exp(pos_logit - lse_ref[...])        # [Tb, 1]
-        dh_ref[...] = g * (acc_ref[...] + (p_pos - 1.0) * pe)
-        dpe_ref[...] = g * (p_pos - 1.0) * h
+        if include_pos:
+            pe = pe_ref[...].astype(jnp.float32)
+            pos_logit = jnp.sum(h * pe, axis=-1, keepdims=True)
+            p_pos = jnp.exp(pos_logit - lse_ref[...])    # [Tb, 1]
+            dh_ref[...] = g * (acc_ref[...] + (p_pos - 1.0) * pe)
+            dpe_ref[...] = g * (p_pos - 1.0) * h
+        else:
+            # partial mode: d(partial lse)/dh = Σ_j w_j ne_j; no pos terms.
+            dh_ref[...] = g * acc_ref[...]
+            dpe_ref[...] = jnp.zeros_like(dpe_ref)
 
 
 def _bwd_dne_kernel(g_ref, h_ref, ne_ref, lq_ref, nid_ref, pid_ref,
@@ -210,16 +232,21 @@ def _bwd_dne_kernel(g_ref, h_ref, ne_ref, lq_ref, nid_ref, pid_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_m",
-                                             "interpret"))
+                                             "interpret", "include_pos",
+                                             "num_neg"))
 def sampled_ce_bwd(g: jax.Array, hidden: jax.Array, pos_emb: jax.Array,
                    neg_emb: jax.Array, log_q: jax.Array, neg_ids: jax.Array,
                    pos_ids: jax.Array, lse: jax.Array, *,
                    block_t: int = 256, block_m: int = 256,
-                   interpret: bool = False):
+                   interpret: bool = False, include_pos: bool = True,
+                   num_neg: int | None = None):
     """Fused backward. g/lse [T]; others as sampled_ce.
-    -> (dh [T,D], dpe [T,D], dne [M,D], dlq [M]) fp32."""
+    -> (dh [T,D], dpe [T,D], dne [M,D], dlq [M]) fp32.
+    include_pos=False: lse is the PARTIAL lse and the pos terms vanish —
+    dpe is zeros; num_neg again overrides the global M."""
     t, d = hidden.shape
     m = neg_emb.shape[0]
+    num_neg = num_neg or m
     block_t, block_m = min(block_t, t), min(block_m, m)
     hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids = _padded(
         hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, block_t, block_m)
@@ -227,7 +254,8 @@ def sampled_ce_bwd(g: jax.Array, hidden: jax.Array, pos_emb: jax.Array,
     lse2 = _pad_dim(lse[:, None], block_t)                   # rows contribute 0
     tp, mp = hidden.shape[0], neg_emb.shape[0]
     dh, dpe = pl.pallas_call(
-        functools.partial(_bwd_dh_kernel, num_neg=m),
+        functools.partial(_bwd_dh_kernel, num_neg=num_neg,
+                          include_pos=include_pos),
         grid=(tp // block_t, mp // block_m),
         in_specs=[
             pl.BlockSpec((block_t, 1), lambda it, im: (it, 0)),
@@ -251,7 +279,7 @@ def sampled_ce_bwd(g: jax.Array, hidden: jax.Array, pos_emb: jax.Array,
         interpret=interpret,
     )(g2, hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, lse2)
     dne, dlq = pl.pallas_call(
-        functools.partial(_bwd_dne_kernel, num_neg=m),
+        functools.partial(_bwd_dne_kernel, num_neg=num_neg),
         grid=(mp // block_m, tp // block_t),
         in_specs=[
             pl.BlockSpec((block_t, 1), lambda im, it: (it, 0)),

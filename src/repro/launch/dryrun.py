@@ -25,10 +25,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCHS, get_config
 from repro.configs.base import LM_SHAPES, ShapeConfig, shape_by_name
 from repro.dist import (param_specs, batch_spec, index_specs,
-                        decode_cache_specs)
+                        decode_cache_specs, vocab_param_specs,
+                        vocab_index_specs)
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_production_mesh, mesh_dp_tp
-from repro.optim import adamw, opt_state_specs
+from repro.optim import adamw, opt_state_specs, OptState
 
 # pure full-attention archs skip long_500k (quadratic @ 500k — DESIGN §5)
 LONG_OK_FAMILIES = ("ssm", "hybrid")
@@ -155,12 +156,19 @@ def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
                moe_impl: str = "shard_map", pad_heads: bool = False,
                proposal: str | None = None, fused_head: str = "auto",
                refresh_every: int | None = None,
-               refresh_policy: str | None = None):
+               refresh_policy: str | None = None,
+               vocab_parallel: int = 1, vocab_size: int | None = None):
     import dataclasses as _dc
     from repro.models import attention as attn_mod
     from repro.models import moe as moe_mod
     attn_mod.set_impl(attn_impl)
     cfg = get_config(arch)
+    if vocab_size is not None:
+        # e.g. the V=10M vocab-parallel cell; keep Vpad divisible by the
+        # vocab axis so head_table_spec's hard requirement holds
+        cfg = _dc.replace(cfg, vocab_size=vocab_size,
+                          vocab_pad_multiple=max(cfg.vocab_pad_multiple,
+                                                 8 * vocab_parallel))
     if proposal is not None:
         cfg = cfg.with_head(proposal=proposal)
     if refresh_every is not None:
@@ -188,7 +196,11 @@ def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
                               num_image_tokens=0)
         elif cfg.family == "hybrid":
             cfg = _dc.replace(cfg, family="ssm", hybrid_attn_every=0)
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if vocab_parallel > 1 and (shape.kind != "train" or head_mode != "midx"):
+        raise ValueError("--vocab-parallel applies to train cells with the "
+                         "midx head only")
+    mesh = make_production_mesh(multi_pod=multi_pod,
+                                vocab_parallel=vocab_parallel)
     dp, tp = mesh_dp_tp(mesh)
     if moe_impl == "shard_map" and cfg.family == "moe" and \
             shape.global_batch % dp == 0:
@@ -208,19 +220,34 @@ def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
         if shape.kind == "train":
             opt = adamw(1e-4)
             opt_abs = jax.eval_shape(opt.init, p_abs)
-            opt_specs = opt_state_specs(p_specs, p_abs, opt_abs, dp=dp,
-                                        data_axes=("pod", "data") if multi_pod
-                                        else ("data",))
+            fh, interp = _FUSED_HEAD_MODES[fused_head]
+            dax = ("pod", "data") if multi_pod else ("data",)
+            if vocab_parallel > 1:
+                # vocab-parallel cell (DESIGN §9): class tables + MIDX index
+                # row-shard over the vocab axis; the backbone replicates over
+                # it (no tp composition — the model axis shrinks to 16/vp).
+                p_specs = vocab_param_specs(cfg, p_abs, vp=vocab_parallel)
+                p_sh = _named(mesh, p_specs)
+                opt_specs = OptState(P(), p_specs,
+                                     None if opt_abs.nu is None else p_specs)
+                idx_abs = steps_mod.abstract_vocab_index(cfg, p_abs,
+                                                         vocab_parallel)
+                idx_sh = _named(mesh, vocab_index_specs(idx_abs))
+                fn = steps_mod.make_vocab_parallel_train_step(
+                    cfg, opt, mesh, data_axes=dax, window=window,
+                    fused_head=fh, interpret=interp)
+            else:
+                opt_specs = opt_state_specs(p_specs, p_abs, opt_abs, dp=dp,
+                                            data_axes=dax)
+                idx_abs = steps_mod.abstract_index(cfg, p_abs)
+                idx_sh = _named(mesh, index_specs(idx_abs))
+                fn = steps_mod.make_train_step(cfg, opt, head_mode=head_mode,
+                                               window=window, fused_head=fh,
+                                               interpret=interp)
             opt_sh = jax.tree_util.tree_map(
                 lambda s: NamedSharding(mesh, s), opt_specs)
-            idx_abs = steps_mod.abstract_index(cfg, p_abs)
-            idx_sh = _named(mesh, index_specs(idx_abs))
             bsh = NamedSharding(mesh, bspec)
             batch = steps_mod.batch_struct(cfg, shape, batch_sharding=bsh)
-            fh, interp = _FUSED_HEAD_MODES[fused_head]
-            fn = steps_mod.make_train_step(cfg, opt, head_mode=head_mode,
-                                           window=window, fused_head=fh,
-                                           interpret=interp)
             jitted = jax.jit(fn,
                              out_shardings=(p_sh, opt_sh, None),
                              donate_argnums=(0, 1))
@@ -330,18 +357,23 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              save_hlo: bool = False, attn_impl: str = "flash",
              moe_impl: str = "shard_map", pad_heads: bool = False,
              fused_head: str = "auto", refresh_every: int | None = None,
-             refresh_policy: str | None = None) -> dict:
+             refresh_policy: str | None = None,
+             vocab_parallel: int = 1, vocab_size: int | None = None) -> dict:
     shape = shape_by_name(shape_name)
     cfg, mesh, lowered, compiled, times = lower_cell(
         arch, shape, multi_pod=multi_pod, head_mode=head_mode,
         attn_impl=attn_impl, moe_impl=moe_impl, pad_heads=pad_heads,
         fused_head=fused_head, refresh_every=refresh_every,
-        refresh_policy=refresh_policy)
+        refresh_policy=refresh_policy, vocab_parallel=vocab_parallel,
+        vocab_size=vocab_size)
     rec = analyze(cfg, mesh, lowered, compiled, shape=shape,
                   head_mode=head_mode)
     rec.update(times)
+    if vocab_parallel > 1:
+        rec["vocab_parallel"] = vocab_parallel
+        rec["vocab_size"] = cfg.vocab_size
     if refresh_policy is not None and shape.kind == "train" \
-            and head_mode == "midx":
+            and head_mode == "midx" and vocab_parallel == 1:
         rec["refresh"] = lower_refresh_cell(cfg, mesh,
                                             refresh_policy=refresh_policy)
         print(f"[dryrun] refresh step ({refresh_policy}): compiled in "
@@ -349,6 +381,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
               f"{rec['refresh']['collectives']['total_bytes']:.3g}")
     os.makedirs(out_dir, exist_ok=True)
     tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}__{head_mode}"
+    if vocab_parallel > 1:
+        tag += f"__vp{vocab_parallel}"
     with open(os.path.join(out_dir, tag + ".json"), "w") as f:
         json.dump(rec, f, indent=1)
     if save_hlo:
@@ -450,6 +484,13 @@ def main():
                     choices=(None, "fixed", "drift"),
                     help="also lower + compile the sharded index-refresh "
                          "step for train cells under this policy (DESIGN §8)")
+    ap.add_argument("--vocab-parallel", type=int, default=1,
+                    help="row-shard the class table + MIDX index over a "
+                         "`vocab` mesh axis of this degree (train cells, "
+                         "midx head; DESIGN §9)")
+    ap.add_argument("--vocab-size", type=int, default=None,
+                    help="override cfg.vocab_size for the lowered config "
+                         "(e.g. 10000000 for the V=10M vocab-parallel cell)")
     args = ap.parse_args()
 
     archs = ([args.arch] if args.arch else
@@ -482,7 +523,9 @@ def main():
                                      attn_impl=args.attn, moe_impl=args.moe,
                                      fused_head=args.fused_head,
                                      refresh_every=args.refresh_every,
-                                     refresh_policy=args.refresh_policy)
+                                     refresh_policy=args.refresh_policy,
+                                     vocab_parallel=args.vocab_parallel,
+                                     vocab_size=args.vocab_size)
                     except Exception as e:
                         failures.append((arch, shape.name, mp, hm, str(e)))
                         print(f"[dryrun] FAIL {arch} {shape.name} "

@@ -4,9 +4,25 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, vocab_parallel: int = 1):
     """16x16 chips per pod; 2 pods when multi_pod. 512 placeholder devices are
-    provided by the dry-run's XLA_FLAGS (host-platform device count)."""
+    provided by the dry-run's XLA_FLAGS (host-platform device count).
+
+    vocab_parallel > 1 carves a `vocab` axis out of the model axis (the class
+    table + MIDX index row-shard over it; dist.vocab_parallel): the 16-chip
+    inner dim becomes (16 // vocab_parallel) model x vocab_parallel vocab.
+    """
+    if vocab_parallel > 1:
+        inner = 16
+        if inner % vocab_parallel:
+            raise ValueError(f"vocab_parallel {vocab_parallel} must divide "
+                             f"the {inner}-chip inner mesh dim")
+        model = inner // vocab_parallel
+        shape = ((2, 16, model, vocab_parallel) if multi_pod
+                 else (16, model, vocab_parallel))
+        axes = (("pod", "data", "model", "vocab") if multi_pod
+                else ("data", "model", "vocab"))
+        return jax.make_mesh(shape, axes)
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
@@ -17,8 +33,19 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_vocab_mesh(data: int = 1, vocab: int = 1):
+    """(data, vocab) mesh for the vocab-parallel head — tests + small runs."""
+    return jax.make_mesh((data, vocab), ("data", "vocab"))
+
+
 def mesh_dp_tp(mesh) -> tuple[int, int]:
     """(total data-parallel degree incl. pod axis, tensor-parallel degree)."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     dp = sizes.get("data", 1) * sizes.get("pod", 1)
     return dp, sizes.get("model", 1)
+
+
+def mesh_vp(mesh) -> int:
+    """Vocab-parallel degree (1 when the mesh has no vocab axis)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("vocab", 1)

@@ -164,6 +164,182 @@ def make_sharded_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh, *,
         check_rep=False)
 
 
+def make_vocab_parallel_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                                   mesh, *, data_axes=("data",),
+                                   vocab_axis: str = "vocab",
+                                   window: Optional[int] = None,
+                                   clip_norm: float = 1.0,
+                                   fused_head: Optional[bool] = None,
+                                   interpret: bool = False) -> Callable:
+    """Vocab-parallel train step (DESIGN §9): the class tables (embed/head)
+    and the MIDX index row-shard over `vocab_axis`; the backbone replicates
+    over it and data-parallelism runs over `data_axes` as usual.
+
+    step(params, opt_state, sharded_index, batch, key)
+        -> (params, opt_state, metrics)
+    with params/opt-state moments sharded by dist.sharding.vocab_param_specs
+    and sharded_index a dist.vocab_parallel.VocabShardedIndex.
+
+    Parity contract (test_vocab_parallel.py): loss and every updated param
+    match the replicated make_train_step at vp=1-equivalent keys to ≤1e-5.
+    Gradient bookkeeping: taking jax.grad inside shard_map sums the
+    cotangents of every shard's (identical) objective, so replicated-leaf
+    grads need a vocab-axis pmean and vocab-sharded leaf grads a 1/vp —
+    after which they are exactly the replicated path's. The global-norm
+    clip psums the sharded leaves' norm contribution so every shard scales
+    by the same factor. The step key folds over the DATA shard index only:
+    vocab shards must draw identical negatives.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import vocab_parallel as vp_mod
+    from repro.dist.sharding import vocab_index_specs, vocab_param_specs
+    from repro.models.model import class_embeddings
+    from repro.optim.optimizers import OptState
+
+    if (cfg.head.mode or "midx") != "midx":
+        raise ValueError("vocab-parallel training requires the MIDX head")
+    axes = tuple(data_axes)
+    dax = axes if len(axes) > 1 else axes[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_vp = sizes[vocab_axis]
+    params_abs = abstract_params(cfg)
+    pspecs = vocab_param_specs(cfg, params_abs, vp=n_vp,
+                               vocab_axis=vocab_axis)
+    opt_abs = jax.eval_shape(optimizer.init, params_abs)
+    ospecs = OptState(P(), pspecs,
+                      None if opt_abs.nu is None else pspecs)
+    idx_specs = vocab_index_specs(abstract_vocab_index(cfg, params_abs, n_vp),
+                                  vocab_axis)
+
+    def loss_fn(params, sharded_idx, batch, key):
+        emb = vp_mod.embed_lookup(params["embed"], batch["tokens"],
+                                  axis=vocab_axis)
+        out = forward(cfg, params, batch["tokens"], window=window,
+                      inputs_embeds=emb, **_model_extras(cfg, batch))
+        local_idx = vp_mod.local_index(sharded_idx)
+        table_local = class_embeddings(cfg, params)
+        ce = vp_mod.loss_midx_vp(cfg, table_local, local_idx, out["hidden"],
+                                 batch["labels"], key, axis=vocab_axis,
+                                 fused=fused_head, interpret=interpret)
+        loss = ce + cfg.router_aux_weight * out["aux_loss"]
+        return loss, {"ce": ce, "aux": out["aux_loss"]}
+
+    def is_vp(spec) -> bool:
+        return any(e == vocab_axis for e in spec)
+
+    def body(params, opt_state, sharded_idx, batch, key):
+        shard = jnp.int32(0)
+        for a in axes:
+            shard = shard * sizes[a] + jax.lax.axis_index(a)
+        key = jax.random.fold_in(key, shard)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, sharded_idx, batch, key)
+        grads = jax.tree_util.tree_map(
+            lambda g, sp: g / n_vp if is_vp(sp)
+            else jax.lax.pmean(g, vocab_axis), grads, pspecs)
+        grads = jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g, dax), grads)
+        # global-norm clip with the sharded leaves psum'd over the vocab
+        # axis, so the scale — and hence the replicated leaves — stay
+        # identical on every shard and equal to the replicated path's
+        sq = jax.tree_util.tree_map(
+            lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads)
+        local_sq = sum(s for s, sp in zip(jax.tree_util.tree_leaves(sq),
+                                          jax.tree_util.tree_leaves(pspecs))
+                       if is_vp(sp))
+        rep_sq = sum(s for s, sp in zip(jax.tree_util.tree_leaves(sq),
+                                        jax.tree_util.tree_leaves(pspecs))
+                     if not is_vp(sp))
+        gnorm = jnp.sqrt(rep_sq + jax.lax.psum(local_sq, vocab_axis))
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g * scale).astype(g.dtype), grads)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = {**metrics, "loss": loss}
+        metrics = jax.tree_util.tree_map(
+            lambda m: jax.lax.pmean(m, dax), metrics)
+        return params, opt_state, {**metrics, "grad_norm": gnorm}
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs, ospecs, idx_specs, P(dax), P()),
+        out_specs=(pspecs, ospecs, P()),
+        check_rep=False)
+
+
+def make_vocab_index_init(cfg: ModelConfig, mesh, *,
+                          vocab_axis: str = "vocab") -> Callable:
+    """init(params, key) -> VocabShardedIndex, built natively per shard
+    (index.sharded.build_vocab_sharded): codebook statistics psum, the CSR
+    state never leaves its shard. `params` arrive sharded by
+    vocab_param_specs, so each shard quantizes only its own table rows."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import vocab_parallel as vp_mod
+    from repro.dist.sharding import vocab_index_specs, vocab_param_specs
+    from repro.index.sharded import build_vocab_sharded
+    from repro.models.model import class_embeddings
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_vp = sizes[vocab_axis]
+    params_abs = abstract_params(cfg)
+    pspecs = vocab_param_specs(cfg, params_abs, vp=n_vp,
+                               vocab_axis=vocab_axis)
+    idx_specs = vocab_index_specs(abstract_vocab_index(cfg, params_abs, n_vp),
+                                  vocab_axis)
+
+    def body(params, key):
+        table = class_embeddings(cfg, params).astype(jnp.float32)
+        cb1, cb2, a1, a2, si, off, cnt, lcnt = build_vocab_sharded(
+            key, table, kind=cfg.head.quantizer, k=cfg.head.midx_k,
+            iters=cfg.head.kmeans_iters, axis=vocab_axis)
+        return vp_mod.VocabShardedIndex(
+            cfg.head.quantizer, n_vp, cb1, cb2, a1[None], a2[None],
+            si[None], off[None], cnt[None], lcnt[None])
+
+    return shard_map(body, mesh=mesh, in_specs=(pspecs, P()),
+                     out_specs=idx_specs, check_rep=False)
+
+
+def make_vocab_refresh_step(cfg: ModelConfig, mesh, *,
+                            vocab_axis: str = "vocab",
+                            policy: Optional[str] = None) -> Callable:
+    """refresh(params, sharded_index, key) -> (sharded_index, metrics) for
+    the vocab-parallel layout: psum'd drift probe + warm-started sharded
+    refit, each shard rebuilding only its local CSR (no all-gather)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import vocab_parallel as vp_mod
+    from repro.dist.sharding import vocab_index_specs, vocab_param_specs
+    from repro.index.sharded import refresh_vocab_sharded
+    from repro.models.model import class_embeddings
+
+    pol = policy or cfg.head.refresh_policy
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_vp = sizes[vocab_axis]
+    params_abs = abstract_params(cfg)
+    pspecs = vocab_param_specs(cfg, params_abs, vp=n_vp,
+                               vocab_axis=vocab_axis)
+    idx_specs = vocab_index_specs(abstract_vocab_index(cfg, params_abs, n_vp),
+                                  vocab_axis)
+
+    def body(params, sharded_idx, key):
+        table = class_embeddings(cfg, params).astype(jnp.float32)
+        local = vp_mod.local_index(sharded_idx)
+        leaves, metrics = refresh_vocab_sharded(
+            local, key, table, axis=vocab_axis, iters=cfg.head.kmeans_iters,
+            policy=pol, threshold=cfg.head.refresh_drift_threshold)
+        cb1, cb2, a1, a2, si, off, cnt, lcnt = leaves
+        new = vp_mod.VocabShardedIndex(
+            sharded_idx.kind, sharded_idx.num_shards, cb1, cb2, a1[None],
+            a2[None], si[None], off[None], cnt[None], lcnt[None])
+        return new, metrics
+
+    return shard_map(body, mesh=mesh, in_specs=(pspecs, idx_specs, P()),
+                     out_specs=(idx_specs, P()), check_rep=False)
+
+
 def make_prefill_step(cfg: ModelConfig, *, window: Optional[int] = None):
     """Full-sequence forward -> last-position logits (serving prefill)."""
 
@@ -205,9 +381,11 @@ def make_refresh_step(cfg: ModelConfig, mesh=None, *,
     With a mesh, the class table is row-sliced over `data_axes`
     (dist.sharding.refresh_table_spec) so each shard quantizes only its
     rows; K-means statistics travel by psum and the assignments all-gather
-    back for the replicated CSR rebuild (repro.index.sharded). Falls back
-    to the replicated step when the padded vocab does not divide the data
-    degree.
+    back for the replicated CSR rebuild (repro.index.sharded). A padded
+    vocab that does not divide the data degree no longer silently falls
+    back to the replicated step: the table is zero-padded up to
+    ceil(Vpad/dp)*dp rows and the pad rows are masked out of every
+    statistic (refresh_sharded's n_valid path).
     """
     pol = policy or cfg.head.refresh_policy
 
@@ -220,7 +398,7 @@ def make_refresh_step(cfg: ModelConfig, mesh=None, *,
 
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    from repro.dist.sharding import refresh_table_spec
+    from repro.dist.sharding import refresh_rows_per_shard
     from repro.index.sharded import refresh_sharded
     from repro.models.model import class_embeddings
 
@@ -229,21 +407,25 @@ def make_refresh_step(cfg: ModelConfig, mesh=None, *,
     dp = 1
     for a in axes:
         dp *= sizes[a]
-    if refresh_table_spec(padded_vocab=cfg.padded_vocab, dp=dp,
-                          data_axes=axes) == P():
-        return refresh_replicated         # vocab not divisible: replicated
+    if dp <= 1:
+        return refresh_replicated
     ax = axes if len(axes) > 1 else axes[0]
-    rows = cfg.padded_vocab // dp
+    vpad = cfg.padded_vocab
+    rows = refresh_rows_per_shard(vpad, dp)
+    n_valid = vpad if rows * dp != vpad else None
 
     def body(params, index, key):
         table = class_embeddings(cfg, params).astype(jnp.float32)
+        if n_valid is not None:
+            table = jnp.pad(table, ((0, rows * dp - vpad), (0, 0)))
         shard = jnp.int32(0)
         for a in axes:
             shard = shard * sizes[a] + jax.lax.axis_index(a)
         local = jax.lax.dynamic_slice_in_dim(table, shard * rows, rows)
         return refresh_sharded(index, key, local, axis=ax,
                                iters=cfg.head.kmeans_iters, policy=pol,
-                               threshold=cfg.head.refresh_drift_threshold)
+                               threshold=cfg.head.refresh_drift_threshold,
+                               n_valid=n_valid)
 
     return shard_map(body, mesh=mesh, in_specs=(P(), P(), P()),
                      out_specs=(P(), P()), check_rep=False)
@@ -305,4 +487,15 @@ def abstract_decode_state(cfg: ModelConfig, params_abs, bsz: int,
 def abstract_index(cfg: ModelConfig, params_abs):
     def build(params):
         return heads.init_head_state(cfg, params, jax.random.PRNGKey(0))
+    return jax.eval_shape(build, params_abs)
+
+
+def abstract_vocab_index(cfg: ModelConfig, params_abs, vp: int):
+    """ShapeDtypeStructs of the VocabShardedIndex at `vp` shards."""
+    from repro.dist import vocab_parallel as vp_mod
+
+    def build(params):
+        index = heads.init_head_state(cfg, params, jax.random.PRNGKey(0))
+        return vp_mod.shard_index(index, vp)
+
     return jax.eval_shape(build, params_abs)

@@ -28,7 +28,8 @@ from repro.configs import get_config
 from repro.data import ZipfLM, make_lm_stream
 from repro.index import IndexLifecycle
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_debug_mesh, mesh_dp_tp
+from repro.launch.mesh import (make_debug_mesh, make_vocab_mesh, mesh_dp_tp,
+                               mesh_vp)
 from repro.models import heads, init_params
 from repro.optim import adamw, cosine_schedule
 from repro.utils import metrics as metrics_mod
@@ -103,7 +104,6 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
                                       warmup_steps=min(100, horizon // 10 + 1),
                                       total_steps=horizon))
     opt_state = optimizer.init(params)
-    index = heads.init_head_state(cfg, params, k_index)
 
     if corpus is None:
         gen = ZipfLM(vocab_size=cfg.vocab_size, num_clusters=64,
@@ -114,25 +114,48 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
     if mesh is None and grad_transport != "fp32":
         mesh = make_debug_mesh(jax.device_count(), 1)
     dp = 1
+    vp = mesh_vp(mesh) if mesh is not None else 1
+    if vp > 1:
+        # vocab-parallel layout (DESIGN §9): class tables + MIDX index
+        # row-shard over the vocab axis; its own step/init/refresh family
+        if (head_mode or cfg.head.mode) != "midx":
+            raise ValueError("vocab-parallel training requires the midx head")
+        if grad_transport != "fp32":
+            raise ValueError("compressed grad transports are not wired into "
+                             "the vocab-parallel step; use fp32")
     if mesh is not None:
         dp, _ = mesh_dp_tp(mesh)
-        data_axes = tuple(a for a in mesh.axis_names if a != "model")
+        data_axes = tuple(a for a in mesh.axis_names
+                          if a not in ("model", "vocab"))
         if batch_size % dp:
             raise ValueError(f"--batch {batch_size} must be divisible by "
                              f"the data-parallel degree {dp}")
-        train_step = jax.jit(steps_mod.make_sharded_train_step(
-            cfg, optimizer, mesh, data_axes=data_axes,
-            grad_transport=grad_transport, head_mode=head_mode,
-            fused_head=fused_head, interpret=fused_interpret))
+        if vp > 1:
+            train_step = jax.jit(steps_mod.make_vocab_parallel_train_step(
+                cfg, optimizer, mesh, data_axes=data_axes,
+                fused_head=fused_head, interpret=fused_interpret))
+        else:
+            train_step = jax.jit(steps_mod.make_sharded_train_step(
+                cfg, optimizer, mesh, data_axes=data_axes,
+                grad_transport=grad_transport, head_mode=head_mode,
+                fused_head=fused_head, interpret=fused_interpret))
     else:
         train_step = jax.jit(steps_mod.make_train_step(
             cfg, optimizer, head_mode=head_mode, fused_head=fused_head,
             interpret=fused_interpret))
+    if vp > 1:
+        index = jax.jit(steps_mod.make_vocab_index_init(cfg, mesh))(
+            params, k_index)
+    else:
+        index = heads.init_head_state(cfg, params, k_index)
     ef = steps_mod.init_grad_transport_state(params, grad_transport, dp)
     # index lifecycle (DESIGN §8): the refresh for step s runs on dispatch
     # while up to `refresh_lag` subsequent steps train against the old index;
-    # on a mesh the rebuild is sharded over the data axes
-    if mesh is not None:
+    # on a mesh the rebuild is sharded over the data axes (vp > 1: each vocab
+    # shard refits its own subindex natively — no all-gather)
+    if vp > 1:
+        refresh = jax.jit(steps_mod.make_vocab_refresh_step(cfg, mesh))
+    elif mesh is not None:
         refresh = jax.jit(steps_mod.make_refresh_step(
             cfg, mesh, data_axes=tuple(a for a in mesh.axis_names
                                        if a != "model")))
@@ -159,7 +182,10 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         k_step = jax.random.fold_in(k_loop, step)
         t0 = time.time()
-        if mesh is not None:
+        if vp > 1:
+            params, opt_state, metrics = train_step(params, opt_state, index,
+                                                    batch, k_step)
+        elif mesh is not None:
             params, opt_state, metrics, ef = train_step(
                 params, opt_state, index, batch, k_step, ef)
         else:
@@ -206,9 +232,12 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
         ckpt.save(steps, (params, opt_state, index),
                   metadata={"next_step": steps})
         # serving export: {"params","index"} only (no opt state) — what
-        # `serve.Engine.from_checkpoint` restores (DESIGN §5)
-        save_serving_state(os.path.join(ckpt_dir, "serve"), steps, params,
-                           index, metadata={"arch": cfg.name})
+        # `serve.Engine.from_checkpoint` restores (DESIGN §5). The serving
+        # stack consumes the replicated index layout, so a vocab-parallel
+        # run skips the export (decode-side vocab parallelism is future work)
+        if vp == 1:
+            save_serving_state(os.path.join(ckpt_dir, "serve"), steps, params,
+                               index, metadata={"arch": cfg.name})
     return params, opt_state, index, history
 
 
@@ -226,6 +255,10 @@ def main():
     ap.add_argument("--dp", type=int, default=0,
                     help="data-parallel degree; >0 runs the shard_map step "
                          "on a (dp, 1) debug mesh")
+    ap.add_argument("--vocab-parallel", type=int, default=1,
+                    help="vocab-parallel degree; >1 row-shards the class "
+                         "table + MIDX index over a (dp, vocab) mesh "
+                         "(DESIGN §9; needs dp*vocab local devices)")
     ap.add_argument("--grad-transport", default="fp32",
                     choices=("fp32", "bf16", "int8_ef"),
                     help="gradient all-reduce transport (DESIGN §4)")
@@ -252,7 +285,11 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = make_debug_mesh(args.dp, 1) if args.dp > 0 else None
+    if args.vocab_parallel > 1:
+        mesh = make_vocab_mesh(data=max(args.dp, 1),
+                               vocab=args.vocab_parallel)
+    else:
+        mesh = make_debug_mesh(args.dp, 1) if args.dp > 0 else None
     fused = {"auto": None, "on": True, "interpret": True,
              "off": False}[args.fused_head]
     if args.fused_head == "on" and jax.default_backend() != "tpu":

@@ -219,15 +219,21 @@ def _shared_attn_apply(cfg, sp, x, cos, sin, window=None):
 def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             image_emb: Optional[jax.Array] = None,
             frames: Optional[jax.Array] = None,
-            window: Optional[int] = None) -> dict:
+            window: Optional[int] = None,
+            inputs_embeds: Optional[jax.Array] = None) -> dict:
     """tokens [B,S] int32 -> {"hidden": [B,S,D], "aux_loss": scalar}.
 
     window: optional sliding-window override for (shared) attention — used by
     the hybrid arch at long context.
+    inputs_embeds: pre-computed token embeddings [B,S,D] replacing the
+    `params["embed"]` gather — the vocab-parallel train step passes the
+    owner-masked psum gather (dist.vocab_parallel.embed_lookup) here because
+    its embed table is row-sharded and cannot be indexed directly.
     """
     b, s = tokens.shape
     dtype = jnp.dtype(cfg.dtype)
-    x = params["embed"][tokens].astype(dtype)
+    x = (inputs_embeds if inputs_embeds is not None
+         else params["embed"][tokens]).astype(dtype)
     hd = cfg.resolved_head_dim
     if cfg.family in ("ssm",):
         cos = sin = None
