@@ -16,13 +16,28 @@ def pad_to(x: int, mult: int) -> int:
 @dataclasses.dataclass(frozen=True)
 class HeadConfig:
     """The paper's technique — sampled softmax head configuration."""
-    mode: str = "midx"            # 'midx' | 'full' | 'uniform' | 'unigram'
+    # Head mode — any repro.proposals contender ('midx' and 'full' keep the
+    # dedicated fast lanes in models/heads.py; the rest route through
+    # heads.loss_sampled): 'midx' | 'full' | 'uniform' | 'unigram' |
+    # 'sphere' | 'rff' | 'rff-fused' | 'lsh' | 'tapas' | 'midx-learnable'.
+    mode: str = "midx"
     quantizer: str = "rq"         # 'pq' | 'rq'
     midx_k: int = 64              # codewords per codebook
     num_negatives: int = 1024     # M
     proposal: str = "pooled"      # 'per_token' | 'pooled' | 'mixture'
     refresh_every: int = 100      # steps between index refresh events
     kmeans_iters: int = 8
+    # Non-MIDX proposal knobs (repro.proposals.registry.from_config):
+    sphere_alpha: float = 100.0   # quadratic-kernel weight (Blanc & Rendle)
+    rff_dim: int = 32             # random Fourier features R
+    rff_tau: float = 4.0          # softmax-kernel temperature
+    tapas_pool: int = 256         # TAPAS pass-1 candidate pool size P
+    tapas_eps: float = 0.05       # TAPAS uniform-mixture floor
+    # midx-learnable: SGD rate for the codebook leaves + aux-loss weights
+    # (L_recon / L_KL, paper §6.2.3)
+    learnable_lr: float = 1e-2
+    aux_recon_weight: float = 1.0
+    aux_kl_weight: float = 1.0
     # Index lifecycle (repro.index, DESIGN §8):
     #   refresh_policy 'fixed'  — every event is a full (warm-started) refit;
     #                  'drift'  — reassign-only rebuild, escalating to the

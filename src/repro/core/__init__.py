@@ -5,9 +5,18 @@ from repro.core.index import MultiIndex, build, refresh
 from repro.core.alias import AliasTable, build_alias, sample_alias
 from repro.core import midx
 from repro.core.midx import Draw
-from repro.core.samplers import make_sampler, Sampler, SAMPLER_NAMES
 from repro.core.sampled_softmax import (
     sampled_softmax_loss, full_softmax_loss, sampled_softmax_from_embeddings,
     corrected_logits)
 from repro.core.learnable import (
     LearnableCodebooks, init_learnable, codebook_losses, index_from_learnable)
+
+
+def __getattr__(name):
+    # Lazy (PEP 562): repro.core.samplers is a shim over repro.proposals,
+    # which itself imports repro.core.midx — loading it eagerly here would
+    # close an import cycle when repro.proposals is the entry point.
+    if name in ("make_sampler", "Sampler", "SAMPLER_NAMES"):
+        from repro.core import samplers
+        return getattr(samplers, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -3,7 +3,8 @@
 Kept so existing imports (`repro.core.index`, `from repro.core import build`)
 keep working; new code — and all lifecycle call sites (incremental refresh,
 drift policy, sharded rebuild, serving hot-swap) — should import from
-`repro.index`.
+`repro.index`. The MIDX *proposal* built on this index lives in
+`repro.proposals.midx` behind the Proposal protocol (DESIGN §10).
 """
 from repro.index.build import (MultiIndex, build, from_quantization,
                                reassign, refresh, _csr_from_assignments)

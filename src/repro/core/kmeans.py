@@ -2,6 +2,9 @@
 
 Kept so existing imports (`repro.core.kmeans`, `from repro.core import
 kmeans`) keep working; new code should import from `repro.index`.
+`repro.core` is shims all the way down now: index machinery lives in
+`repro.index`, the sampler contenders in `repro.proposals` (DESIGN §10) —
+only midx/sampled_softmax/alias/learnable math remains native here.
 """
 from repro.index.kmeans import KMeansResult, kmeans, _assign, _update
 

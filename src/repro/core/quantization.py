@@ -1,7 +1,8 @@
 """Re-export shim: quantizers moved to `repro.index.quantization` (DESIGN §8).
 
 Kept so existing imports (`repro.core.quantization`) keep working; new code
-should import from `repro.index`.
+should import from `repro.index` (and from `repro.proposals` for the
+samplers built on these quantizers, DESIGN §10).
 """
 from repro.index.kmeans import _assign
 from repro.index.quantization import (Quantization, QuantizerKind,

@@ -1,258 +1,31 @@
-"""Baseline samplers behind one interface (paper §6.1).
+"""Compatibility shim — the samplers moved to `repro.proposals` (DESIGN §10).
 
-All samplers expose:
-  init(key, class_embeddings, class_freq) -> state (pytree)
-  sample(state, key, z, m)                -> Draw(ids [..., m], log_q [..., m])
-  log_prob(state, z, ids)                 -> log q(ids | z)
-  refresh(state, key, class_embeddings)   -> state   (adaptive samplers only)
+`Sampler` is an alias of `repro.proposals.Proposal` and `make_sampler`
+delegates to `repro.proposals.make_proposal`, so existing callers (tests,
+benchmarks, `repro.core.make_sampler`) keep working unchanged. New code
+should import from `repro.proposals` directly — the registry there also
+carries the contenders this shim predates (tapas, rff-fused, the trainable
+midx-learnable-* codebooks).
 
-Static:   uniform, unigram (Vose alias).
-Adaptive: sphere (quadratic kernel, Blanc & Rendle 2018), RFF (Rawat et al.
-          2019), LSH (Spring & Shrivastava 2017), full (exact softmax),
-          midx-pq / midx-rq (this paper), midx-exact (Theorem 1).
-Kernel/LSH/full are O(N·D) per query — faithful to the paper's own GPU
-implementation ("does not use tree structures"); they are baselines, not the
-contribution.
+SAMPLER_NAMES keeps its pre-refactor value: the subset of PROPOSAL_NAMES the
+original baseline suite covered (paper §6.1).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Optional
+from repro.proposals import Draw, Proposal, make_proposal
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+__all__ = ["Draw", "Sampler", "make_sampler", "SAMPLER_NAMES"]
 
-from repro.core import midx as midx_mod
-from repro.core import index as index_mod
-from repro.core.alias import AliasTable, build_alias, sample_alias
-from repro.core.midx import Draw
-
-
-@dataclasses.dataclass(frozen=True)
-class Sampler:
-    name: str
-    init: Callable[..., Any]
-    sample: Callable[..., Draw]
-    log_prob: Callable[..., jax.Array]
-    refresh: Callable[..., Any]
-
-
-def _categorical_draw(key: jax.Array, log_p: jax.Array, m: int) -> Draw:
-    ids = jax.random.categorical(key, log_p[..., None, :], axis=-1,
-                                 shape=(*log_p.shape[:-1], m))
-    log_q = jnp.take_along_axis(log_p, ids, axis=-1)
-    return Draw(ids.astype(jnp.int32), log_q)
-
-
-# ---------------------------------------------------------------------- uniform
-def _uniform_init(key, class_emb, class_freq=None):
-    return {"n": class_emb.shape[0]}
-
-def _uniform_sample(state, key, z, m):
-    n = state["n"]
-    ids = jax.random.randint(key, (*z.shape[:-1], m), 0, n).astype(jnp.int32)
-    logn = jnp.log(jnp.asarray(n, jnp.float32))     # jit-safe if n is traced
-    return Draw(ids, jnp.broadcast_to(-logn, ids.shape))
-
-def _uniform_log_prob(state, z, ids):
-    logn = jnp.log(jnp.asarray(state["n"], jnp.float32))
-    return jnp.broadcast_to(-logn, ids.shape)
-
-
-# ---------------------------------------------------------------------- unigram
-def _unigram_init(key, class_emb, class_freq=None):
-    n = class_emb.shape[0]
-    freq = np.ones(n) if class_freq is None else np.asarray(class_freq, np.float64)
-    return {"table": build_alias(freq + 1e-12)}
-
-def _unigram_sample(state, key, z, m):
-    t: AliasTable = state["table"]
-    ids = sample_alias(key, t, (*z.shape[:-1], m))
-    return Draw(ids, t.logq[ids])
-
-def _unigram_log_prob(state, z, ids):
-    return state["table"].logq[ids]
-
-
-# ---------------------------------------------------------------------- full softmax
-def _full_init(key, class_emb, class_freq=None):
-    return {"emb": class_emb}
-
-def _full_log_p(state, z):
-    o = z.astype(jnp.float32) @ state["emb"].T.astype(jnp.float32)
-    return jax.nn.log_softmax(o, axis=-1)
-
-def _full_sample(state, key, z, m):
-    return _categorical_draw(key, _full_log_p(state, z), m)
-
-def _full_log_prob(state, z, ids):
-    return jnp.take_along_axis(_full_log_p(state, z), ids, axis=-1)
-
-
-# ---------------------------------------------------------------------- sphere
-def _sphere_init(key, class_emb, class_freq=None, alpha: float = 100.0):
-    return {"emb": class_emb, "alpha": jnp.float32(alpha)}
-
-def _sphere_log_p(state, z):
-    o = z.astype(jnp.float32) @ state["emb"].T.astype(jnp.float32)
-    w = state["alpha"] * o * o + 1.0
-    return jnp.log(w) - jnp.log(jnp.sum(w, axis=-1, keepdims=True))
-
-def _sphere_sample(state, key, z, m):
-    return _categorical_draw(key, _sphere_log_p(state, z), m)
-
-def _sphere_log_prob(state, z, ids):
-    return jnp.take_along_axis(_sphere_log_p(state, z), ids, axis=-1)
-
-
-# ---------------------------------------------------------------------- RFF
-def _rff_map(x, w, tau):
-    # x normalized; phi(x) = [cos(Wx); sin(Wx)] / sqrt(R)
-    xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
-    proj = jnp.sqrt(tau) * (xn @ w.T)
-    r = w.shape[0]
-    return jnp.concatenate([jnp.cos(proj), jnp.sin(proj)], axis=-1) / jnp.sqrt(float(r))
-
-def _rff_init(key, class_emb, class_freq=None, r: int = 32, tau: float = 4.0):
-    d = class_emb.shape[-1]
-    w = jax.random.normal(key, (r, d), jnp.float32)
-    phi_c = _rff_map(class_emb.astype(jnp.float32), w, tau)      # [N, 2R]
-    return {"emb": class_emb, "w": w, "tau": jnp.float32(tau), "phi_c": phi_c}
-
-def _rff_log_p(state, z):
-    phi_z = _rff_map(z.astype(jnp.float32), state["w"], state["tau"])
-    scores = jnp.maximum(phi_z @ state["phi_c"].T, 1e-8)          # [..., N]
-    return jnp.log(scores) - jnp.log(jnp.sum(scores, axis=-1, keepdims=True))
-
-def _rff_sample(state, key, z, m):
-    return _categorical_draw(key, _rff_log_p(state, z), m)
-
-def _rff_log_prob(state, z, ids):
-    return jnp.take_along_axis(_rff_log_p(state, z), ids, axis=-1)
-
-def _rff_refresh(state, key, class_emb):
-    phi_c = _rff_map(class_emb.astype(jnp.float32), state["w"], state["tau"])
-    return {**state, "emb": class_emb, "phi_c": phi_c}
-
-
-# ---------------------------------------------------------------------- LSH (SimHash)
-def _lsh_init(key, class_emb, class_freq=None, tables: int = 16, bits: int = 4,
-              eps: float = 0.1):
-    d = class_emb.shape[-1]
-    planes = jax.random.normal(key, (tables, bits, d), jnp.float32)
-    codes = _lsh_codes(planes, class_emb).T                       # [T, N]
-    n_buckets = 2 ** bits
-    sizes = jax.vmap(lambda c: jnp.zeros(n_buckets, jnp.int32).at[c].add(1))(codes)
-    return {"planes": planes, "codes": codes, "sizes": sizes,
-            "eps": jnp.float32(eps), "n": class_emb.shape[0]}
-
-def _lsh_codes(planes, x):
-    # [T, bits, D] @ [..., D] -> sign bits -> integer bucket code
-    proj = jnp.einsum("tbd,...d->...tb", planes, x.astype(jnp.float32))
-    bits = (proj > 0).astype(jnp.int32)
-    weights = 2 ** jnp.arange(planes.shape[1], dtype=jnp.int32)
-    return jnp.sum(bits * weights, axis=-1)                       # [..., T]
-
-def _lsh_log_p(state, z):
-    zc = _lsh_codes(state["planes"], z)                           # [..., T]
-    match = (state["codes"] == zc[..., :, None])                  # [..., T, N]
-    t = state["codes"].shape[0]
-    bucket_sz = state["sizes"][jnp.arange(t), zc]                 # [..., T]
-    per_table = match.astype(jnp.float32) / jnp.maximum(bucket_sz, 1)[..., None]
-    p = jnp.mean(per_table, axis=-2)                              # [..., N]
-    p = (1.0 - state["eps"]) * p + state["eps"] / state["n"]
-    return jnp.log(p) - jnp.log(jnp.sum(p, axis=-1, keepdims=True))
-
-def _lsh_sample(state, key, z, m):
-    return _categorical_draw(key, _lsh_log_p(state, z), m)
-
-def _lsh_log_prob(state, z, ids):
-    return jnp.take_along_axis(_lsh_log_p(state, z), ids, axis=-1)
-
-def _lsh_refresh(state, key, class_emb):
-    codes = _lsh_codes(state["planes"], class_emb).T
-    n_buckets = state["sizes"].shape[-1]
-    sizes = jax.vmap(lambda c: jnp.zeros(n_buckets, jnp.int32).at[c].add(1))(codes)
-    return {**state, "codes": codes, "sizes": sizes}
-
-
-# ---------------------------------------------------------------------- MIDX
-def _midx_init_factory(kind: str, k: int, iters: int = 10):
-    def init(key, class_emb, class_freq=None):
-        return index_mod.build(key, class_emb.astype(jnp.float32),
-                               kind=kind, k=k, iters=iters)
-    return init
-
-def _midx_sample(state, key, z, m):
-    # two-stage (O(K) per draw) — identical distribution to the flat K²
-    # categorical; see midx.sample_twostage vs midx.sample.
-    return midx_mod.sample_twostage(state, key, z, m)
-
-def _midx_log_prob(state, z, ids):
-    return midx_mod.log_prob(state, z, ids)
-
-def _midx_refresh(state, key, class_emb):
-    return index_mod.refresh(state, key, class_emb.astype(jnp.float32))
-
-
-def _midx_exact_init_factory(kind: str, k: int, iters: int = 10):
-    def init(key, class_emb, class_freq=None):
-        idx = index_mod.build(key, class_emb.astype(jnp.float32),
-                              kind=kind, k=k, iters=iters)
-        return {"index": idx, "emb": class_emb}
-    return init
-
-def _midx_exact_sample(state, key, z, m):
-    return midx_mod.sample_exact(state["index"], key, z, state["emb"], m)
-
-def _midx_exact_log_prob(state, z, ids):
-    lp = midx_mod.exact_log_prob(state["index"], z, state["emb"])
-    return jnp.take_along_axis(lp, ids, axis=-1)
-
-def _midx_exact_refresh(state, key, class_emb):
-    idx = index_mod.refresh(state["index"], key, class_emb.astype(jnp.float32))
-    return {"index": idx, "emb": class_emb}
-
-
-def _no_refresh(state, key, class_emb):
-    return state
-
-def _full_refresh(state, key, class_emb):
-    return {**state, "emb": class_emb}
+Sampler = Proposal
 
 
 def make_sampler(name: str, *, k: int = 32, kmeans_iters: int = 10,
                  alpha: float = 100.0, rff_dim: int = 32, rff_tau: float = 4.0,
                  lsh_tables: int = 16, lsh_bits: int = 4) -> Sampler:
     """Factory. Names match the paper's §6.1 baselines."""
-    if name == "uniform":
-        return Sampler(name, _uniform_init, _uniform_sample, _uniform_log_prob, _no_refresh)
-    if name == "unigram":
-        return Sampler(name, _unigram_init, _unigram_sample, _unigram_log_prob, _no_refresh)
-    if name == "full":
-        return Sampler(name, _full_init, _full_sample, _full_log_prob, _full_refresh)
-    if name == "sphere":
-        return Sampler(name,
-                       lambda key, emb, freq=None: _sphere_init(key, emb, freq, alpha),
-                       _sphere_sample, _sphere_log_prob, _full_refresh)
-    if name == "rff":
-        return Sampler(name,
-                       lambda key, emb, freq=None: _rff_init(key, emb, freq, rff_dim, rff_tau),
-                       _rff_sample, _rff_log_prob, _rff_refresh)
-    if name == "lsh":
-        return Sampler(name,
-                       lambda key, emb, freq=None: _lsh_init(key, emb, freq, lsh_tables, lsh_bits),
-                       _lsh_sample, _lsh_log_prob, _lsh_refresh)
-    if name in ("midx-pq", "midx-rq"):
-        kind = name.split("-")[1]
-        return Sampler(name, _midx_init_factory(kind, k, kmeans_iters),
-                       _midx_sample, _midx_log_prob, _midx_refresh)
-    if name in ("midx-exact-pq", "midx-exact-rq"):
-        kind = name.split("-")[2]
-        return Sampler(name, _midx_exact_init_factory(kind, k, kmeans_iters),
-                       _midx_exact_sample, _midx_exact_log_prob, _midx_exact_refresh)
-    raise ValueError(f"unknown sampler {name!r}")
+    return make_proposal(name, k=k, kmeans_iters=kmeans_iters, alpha=alpha,
+                         rff_dim=rff_dim, rff_tau=rff_tau,
+                         lsh_tables=lsh_tables, lsh_bits=lsh_bits)
 
 
 SAMPLER_NAMES = ("uniform", "unigram", "full", "sphere", "rff", "lsh",

@@ -157,14 +157,18 @@ class RefreshEvent:
 
 
 class IndexLifecycle:
-    """Double-buffered index refresh driver for the train loop (DESIGN §8).
+    """Double-buffered head-state refresh driver for the train loop
+    (DESIGN §8, generalized to any proposal in §10).
 
-    `refresh_fn(params, index, key) -> (index, metrics)` is dispatched at
-    every cadence point; with `lag > 0` the result is left in flight (JAX
-    dispatch is asynchronous) while the next `lag` steps train against the
-    old index, then swapped in — the rebuild cost overlaps training instead
-    of stalling it. `lag = 0` degenerates to the synchronous swap-at-dispatch
-    behaviour. The staleness of the live index is bounded by `every + lag`
+    `refresh_fn(params, state, key) -> (state, metrics)` is dispatched at
+    every cadence point; the state is whatever pytree the resolved proposal
+    maintains — the MultiIndex for 'midx', the TAPAS pool, the RFF feature
+    map, the learnable {"cb", "index"} pair — the driver never looks inside
+    it. With `lag > 0` the result is left in flight (JAX dispatch is
+    asynchronous) while the next `lag` steps train against the old state,
+    then swapped in — the rebuild cost overlaps training instead of
+    stalling it. `lag = 0` degenerates to the synchronous swap-at-dispatch
+    behaviour. The staleness of the live state is bounded by `every + lag`
     steps.
 
     Determinism: the refresh key is folded from the dispatch step, so two
@@ -194,7 +198,9 @@ class IndexLifecycle:
         step, _ready, index, metrics, t_disp = self._pending
         self._pending = None
         t0 = time.perf_counter()
-        jax.block_until_ready(index.offsets)
+        # the state is any proposal pytree (MultiIndex, TAPAS pool, RFF
+        # features, ...) — block on the whole tree, not a MIDX-only leaf
+        jax.block_until_ready(index)
         # blocked time + dispatch time = host cost attributable to refresh;
         # device time hidden under the lag window is free by construction
         seconds = (time.perf_counter() - t0) + t_disp

@@ -85,3 +85,24 @@ def midx_tables_fn(*, use_kernel: Optional[bool] = None,
                                interpret=interpret)
 
     return tables_fn
+
+
+def rff_sample_fn(*, use_kernel: Optional[bool] = None,
+                  interpret: bool = False) -> Callable:
+    """The fused RFF Gumbel-top-m sampler for proposals.rff ('rff-fused').
+
+    Returns a callable (phi_z [T,R2], phi_c [N,R2], seed, m) -> (ids, log_q).
+    TPU (or interpret mode) runs the Pallas kernel; every other backend runs
+    the jnp oracle, which consumes the same counter-based hash noise, so the
+    draws are bit-identical either way (kernels/rff_sample/ops.py).
+    """
+    from repro.kernels.rff_sample.ops import rff_gumbel_sample
+    interpret = interpret or interpret_default()
+    if use_kernel is None:
+        use_kernel = pallas_supported() or interpret
+
+    def sample_fn(phi_z: jax.Array, phi_c: jax.Array, seed, m: int):
+        return rff_gumbel_sample(phi_z, phi_c, seed, m,
+                                 use_kernel=use_kernel, interpret=interpret)
+
+    return sample_fn

@@ -1,0 +1,59 @@
+"""Jit'd public wrapper: fused RFF Gumbel-top-m sampling via the Pallas kernel.
+
+`use_kernel=False` (or non-TPU backends without interpret mode) falls back to
+the jnp oracle — which consumes the SAME counter-based hash noise, so the
+draws are bit-identical across the kernel / interpreter / oracle paths and a
+training run has one semantics regardless of backend (kernels/dispatch.py
+decides which path runs).
+
+Sampling indices is not differentiable; log_q is treated as constant w.r.t.
+the query/table (standard sampled-softmax practice — the IS correction enters
+the loss through corrected logits, not through dq/dz), so the wrapper
+stop-gradients its inputs rather than carrying a custom VJP.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rff_sample.ref import rff_gumbel_ref
+from repro.kernels.rff_sample.rff_sample import rff_sample
+
+
+def _pad_rows(x, block):
+    r = x.shape[0]
+    pad = (-r) % block
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], 0)
+    return x
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "use_kernel", "block_t", "block_m",
+                                    "block_n", "interpret"))
+def rff_gumbel_sample(phi_z: jax.Array, phi_c: jax.Array, seed: jax.Array,
+                      m: int, *, use_kernel: bool = True, block_t: int = 8,
+                      block_m: int = 16, block_n: int = 128,
+                      interpret: bool = False):
+    """phi_z [T, R2], phi_c [N, R2], seed int32 scalar.
+    Returns (ids [T, m] int32, log_q [T, m] float32): m iid draws per query
+    from softmax(log max(φ(z)·φ(c), 1e-8)) with their exact log-probs."""
+    phi_z = jax.lax.stop_gradient(phi_z)
+    phi_c = jax.lax.stop_gradient(phi_c)
+    seed = jax.lax.stop_gradient(seed).astype(jnp.int32)
+    t, _ = phi_z.shape
+    n = phi_c.shape[0]
+    if not use_kernel:
+        ids, score, lse = rff_gumbel_ref(phi_z, phi_c, seed, m)
+        return ids, score - lse[:, None]
+    zp = _pad_rows(phi_z, block_t)
+    cp = _pad_rows(phi_c, block_n)
+    mp = m + ((-m) % block_m)
+    meta = jnp.stack([seed, jnp.int32(n)]).reshape(1, 2)
+    ids, score, m_run, l_run = rff_sample(
+        zp, cp, meta, mp, block_t=block_t, block_m=block_m, block_n=block_n,
+        interpret=interpret)
+    lse = m_run + jnp.log(jnp.maximum(l_run, 1e-30))
+    return ids[:t, :m], (score - lse)[:t, :m]

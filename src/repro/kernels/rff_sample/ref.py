@@ -1,0 +1,92 @@
+"""Pure-jnp oracle for the fused RFF Gumbel-top-m sampling kernel.
+
+The draw noise comes from a counter-based integer hash over
+(seed, query row, draw index, class column) — NOT from jax.random — so the
+kernel and this oracle produce bit-identical Gumbel perturbations from the
+same seed: the kernel tiles the (t, j, n) index space while the oracle
+materializes it, and both feed the same integers through the same mix.
+That makes `ids` exactly comparable in the parity tests and keeps training
+semantics identical whether the backend runs the compiled kernel, the
+interpreter, or this oracle (kernels/dispatch.py decides).
+
+Tie-breaking contract (what the kernel's blocked running-argmax implements):
+the winning column for a draw is the MINIMUM column index among the global
+maxima of the perturbed scores.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampled_softmax import NEG_INF
+
+# xorshift-multiply finalizer constants (int32 bit patterns of the usual
+# uint32 hashing constants; all arithmetic is two's-complement wrapping, so
+# signed/unsigned makes no difference to the bits). Plain Python ints so
+# Pallas folds them as literals instead of captured arrays.
+_C_T = -1640531535    # 0x9E3779B1
+_C_J = -2049568137    # 0x85EBCA77
+_C_N = -1028477379    # 0xC2B2AE3D
+_M1 = 0x7FEB352D
+_M2 = -2073287029     # 0x846CA68B
+
+
+def _mix(x: jax.Array) -> jax.Array:
+    x = x ^ jax.lax.shift_right_logical(x, 16)
+    x = x * _M1
+    x = x ^ jax.lax.shift_right_logical(x, 15)
+    x = x * _M2
+    x = x ^ jax.lax.shift_right_logical(x, 16)
+    return x
+
+
+def gumbel_noise(seed: jax.Array, t_ids: jax.Array, d_ids: jax.Array,
+                 n_ids: jax.Array) -> jax.Array:
+    """Deterministic Gumbel(0,1) noise for (query t, draw d, class n) int32
+    index arrays under an int32 `seed`. Shared by kernel and oracle."""
+    h = _mix(seed ^ (t_ids * _C_T))
+    h = _mix(h ^ (d_ids * _C_J))
+    h = _mix(h ^ (n_ids * _C_N))
+    # top-24 bits -> uniform in (0, 1), exactly representable in f32
+    u24 = jax.lax.shift_right_logical(h, 8).astype(jnp.float32)
+    u = u24 * jnp.float32(1.0 / (1 << 24)) + jnp.float32(1.0 / (1 << 25))
+    return -jnp.log(-jnp.log(u))
+
+
+def rff_scores(phi_z: jax.Array, phi_c: jax.Array) -> jax.Array:
+    """log q-scores (unnormalized): log max(φ(z)·φ(c), 1e-8). [T, N]"""
+    s = phi_z.astype(jnp.float32) @ phi_c.astype(jnp.float32).T
+    return jnp.log(jnp.maximum(s, 1e-8))
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def rff_gumbel_ref(phi_z: jax.Array, phi_c: jax.Array, seed: jax.Array,
+                   m: int):
+    """Oracle Gumbel-top-m: (ids [T,m] i32, score [T,m], lse [T]).
+
+    `score` is the unnormalized logit of each drawn id; log_q = score − lse.
+    Loops over draws (lax.map) so peak memory stays [T, N] per draw.
+    """
+    logits = rff_scores(phi_z, phi_c)                          # [T, N]
+    t, n = logits.shape
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (t, n), 0)
+    n_ids = jax.lax.broadcasted_iota(jnp.int32, (t, n), 1)
+    big = jnp.int32(2 ** 30)
+
+    def one(j):
+        g = gumbel_noise(seed.astype(jnp.int32), t_ids,
+                         jnp.full((t, n), j, jnp.int32), n_ids)
+        pert = logits + g
+        cand = jnp.max(pert, axis=-1)
+        sel = jnp.min(jnp.where(pert >= cand[:, None], n_ids, big), axis=-1)
+        score = jnp.take_along_axis(logits, sel[:, None], axis=-1)[:, 0]
+        return sel.astype(jnp.int32), score
+
+    sel, score = jax.lax.map(one, jnp.arange(m, dtype=jnp.int32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    return sel.T, score.T, lse
+
+
+__all__ = ["rff_gumbel_ref", "rff_scores", "gumbel_noise", "NEG_INF"]

@@ -106,7 +106,11 @@ def main():
                     help="per-slot capacity (0 = fit prompt+tokens)")
     ap.add_argument("--num-pages", type=int, default=0,
                     help="physical pool size (0 = full residency)")
-    ap.add_argument("--head", default="midx", choices=("midx", "full"))
+    from repro.proposals import proposal_modes
+    ap.add_argument("--head", default="midx", choices=proposal_modes(),
+                    help="decode head: midx/full use the dedicated paths; "
+                         "any other repro.proposals contender serves via "
+                         "the generic candidate-rescore head")
     ap.add_argument("--num-candidates", type=int, default=0,
                     help="MIDX decode candidates (0 = cfg.head default)")
     ap.add_argument("--temperature", type=float, default=0.0,

@@ -17,6 +17,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import (decode_step, forward, heads, init_decode_state,
                           init_params, logits_full)
 from repro.optim import Optimizer, clip_by_global_norm
+from repro.proposals import registry as proposals_registry
 
 
 def _model_extras(cfg: ModelConfig, batch: dict) -> dict:
@@ -28,31 +29,74 @@ def _model_extras(cfg: ModelConfig, batch: dict) -> dict:
     return kw
 
 
+def resolve_proposal(cfg: ModelConfig, head_mode: Optional[str] = None):
+    """(mode, Proposal-or-None) for a head config, validated early.
+
+    Unknown modes raise the informative registry error here — at step-build
+    time — instead of silently training the MIDX head (the pre-refactor
+    fallthrough). 'midx' and 'full' return None: they keep their dedicated
+    lanes and the Proposal object is not needed on the hot path.
+    """
+    mode = head_mode or cfg.head.mode
+    proposals_registry.validate_mode(mode)
+    if mode in ("midx", "full"):
+        return mode, None
+    return mode, proposals_registry.from_config(cfg.head, mode)
+
+
 def make_loss_fn(cfg: ModelConfig, *, head_mode: Optional[str] = None,
                  window: Optional[int] = None,
                  fused_head: Optional[bool] = None,
-                 interpret: bool = False) -> Callable:
-    """loss(params, index, batch, key) -> (loss, metrics).
+                 interpret: bool = False,
+                 with_aux: bool = False) -> Callable:
+    """loss(params, state, batch, key) -> (loss, metrics).
+
+    `state` is the head state for the resolved mode: the MultiIndex for
+    'midx', ignored for 'full', and the proposal's state pytree for every
+    registry contender (heads.loss_sampled routes it; midx-backed proposals
+    keep the fused fast lane). The resolved Proposal (or None) is exposed as
+    `loss_fn.proposal`.
 
     `fused_head` / `interpret` select the fused Pallas MIDX head
     (DESIGN §3): None defers to cfg.head.use_fused_head + the backend via
     kernels.dispatch; interpret=True runs the kernels under the Pallas
     interpreter so the fused graph lowers on any backend (dry-run, tests).
-    """
-    mode = head_mode or cfg.head.mode
 
-    def loss_fn(params, index, batch, key):
+    `with_aux=True` adds a trainable proposal's L_recon+L_KL auxiliary
+    objective (paper §6.2.3) to the loss — only meaningful when the caller
+    also differentiates w.r.t. the state's trainable leaves
+    (make_train_step's returns_state path).
+    """
+    mode, proposal = resolve_proposal(cfg, head_mode)
+    include_aux = bool(with_aux and proposal is not None
+                       and proposal.trainable)
+
+    def loss_fn(params, state, batch, key):
         out = forward(cfg, params, batch["tokens"], window=window,
                       **_model_extras(cfg, batch))
         if mode == "full":
             ce = heads.loss_full(cfg, params, out["hidden"], batch["labels"])
-        else:
-            ce = heads.loss_midx(cfg, params, index, out["hidden"],
+        elif mode == "midx":
+            ce = heads.loss_midx(cfg, params, state, out["hidden"],
                                  batch["labels"], key, fused=fused_head,
                                  interpret=interpret)
+        else:
+            ce = heads.loss_sampled(cfg, params, proposal, state,
+                                    out["hidden"], batch["labels"], key,
+                                    fused=fused_head, interpret=interpret)
         loss = ce + cfg.router_aux_weight * out["aux_loss"]
-        return loss, {"ce": ce, "aux": out["aux_loss"]}
+        metrics = {"ce": ce, "aux": out["aux_loss"]}
+        if include_aux:
+            from repro.models.model import class_embeddings
+            h = out["hidden"].astype(jnp.float32)
+            aux_p, am = proposal.aux_loss(
+                state, jax.random.fold_in(key, 7),
+                h.reshape(-1, h.shape[-1]), class_embeddings(cfg, params))
+            loss = loss + aux_p
+            metrics.update(am)
+        return loss, metrics
 
+    loss_fn.proposal = proposal
     return loss_fn
 
 
@@ -62,17 +106,58 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
                     clip_norm: float = 1.0,
                     fused_head: Optional[bool] = None,
                     interpret: bool = False) -> Callable:
-    loss_fn = make_loss_fn(cfg, head_mode=head_mode, window=window,
-                           fused_head=fused_head, interpret=interpret)
+    """Single-device train step, dispatched on the resolved head mode.
 
-    def train_step(params, opt_state, index, batch, key):
+    Non-trainable modes (everything but midx-learnable-*) keep the
+    historical signature
+        step(params, opt_state, state, batch, key)
+            -> (params, opt_state, metrics)
+    with `step.returns_state = False`. Trainable proposals return the
+    updated head state too —
+        step(...) -> (params, opt_state, state, metrics)
+    with `step.returns_state = True`: the codebook leaves take an SGD step
+    at cfg.head.learnable_lr on the aux-loss gradient each call. Read the
+    attribute BEFORE jit (jit-wrapped callables drop it).
+    """
+    loss_fn = make_loss_fn(cfg, head_mode=head_mode, window=window,
+                           fused_head=fused_head, interpret=interpret,
+                           with_aux=True)
+    proposal = loss_fn.proposal
+
+    if proposal is not None and proposal.trainable:
+        lr = cfg.head.learnable_lr
+
+        def train_step(params, opt_state, state, batch, key):
+            trainable, rest = proposal.split_trainable(state)
+
+            def lf(p, tr):
+                return loss_fn(p, proposal.merge_trainable(tr, rest),
+                               batch, key)
+
+            (loss, metrics), (gp, gt) = jax.value_and_grad(
+                lf, argnums=(0, 1), has_aux=True)(params, trainable)
+            gp, gnorm = clip_by_global_norm(gp, clip_norm)
+            params, opt_state = optimizer.update(gp, opt_state, params)
+            trainable = jax.tree_util.tree_map(lambda t, g: t - lr * g,
+                                               trainable, gt)
+            state = proposal.merge_trainable(trainable, rest)
+            metrics = {**metrics, "loss": loss, "grad_norm": gnorm}
+            return params, opt_state, state, metrics
+
+        train_step.returns_state = True
+        train_step.proposal = proposal
+        return train_step
+
+    def train_step(params, opt_state, state, batch, key):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, index, batch, key)
+            params, state, batch, key)
         grads, gnorm = clip_by_global_norm(grads, clip_norm)
         params, opt_state = optimizer.update(grads, opt_state, params)
         metrics = {**metrics, "loss": loss, "grad_norm": gnorm}
         return params, opt_state, metrics
 
+    train_step.returns_state = False
+    train_step.proposal = proposal
     return train_step
 
 
@@ -370,10 +455,16 @@ def make_decode_step(cfg: ModelConfig, *, window: Optional[int] = None,
 
 
 def make_refresh_step(cfg: ModelConfig, mesh=None, *,
-                      data_axes=("data",), policy: Optional[str] = None):
-    """Index refresh step: refresh(params, index, key) -> (index, metrics).
+                      data_axes=("data",), policy: Optional[str] = None,
+                      head_mode: Optional[str] = None):
+    """Head-state refresh step: refresh(params, state, key) -> (state, metrics).
 
-    Without a mesh the rebuild runs single-device under
+    Registry proposal modes (anything but 'midx'/'full') refresh through
+    Proposal.refresh against the current class table — the TAPAS pass-1
+    pool redraw, the RFF feature re-map, the learnable hard re-assign — and
+    report zeroed drift metrics (drift probes are a MultiIndex concept).
+
+    For the MIDX index: without a mesh the rebuild runs single-device under
     cfg.head.refresh_policy (DESIGN §8): 'fixed' = warm-started full refit
     every event, 'drift' = reassign-only with lax.cond escalation to the
     refit when drift exceeds cfg.head.refresh_drift_threshold.
@@ -387,6 +478,20 @@ def make_refresh_step(cfg: ModelConfig, mesh=None, *,
     ceil(Vpad/dp)*dp rows and the pad rows are masked out of every
     statistic (refresh_sharded's n_valid path).
     """
+    mode, proposal = resolve_proposal(cfg, head_mode)
+    if proposal is not None:
+        def refresh_proposal(params, state, key):
+            new = heads.refresh_proposal_state(cfg, params, proposal, state,
+                                               key)
+            zeros = {"reassigned_frac": jnp.float32(0.0),
+                     "codeword_drift": jnp.float32(0.0),
+                     "did_full": jnp.float32(0.0),
+                     "distortion": jnp.float32(0.0)}
+            return new, zeros
+
+        refresh_proposal.proposal = proposal
+        return refresh_proposal
+
     pol = policy or cfg.head.refresh_policy
 
     def refresh_replicated(params, index, key):

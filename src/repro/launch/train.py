@@ -95,6 +95,9 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
                   if v is not None}
     if refresh_kw:
         cfg = cfg.with_head(**refresh_kw)
+    # resolve + validate the head mode up front: an unknown mode raises the
+    # registry's informative error here instead of silently training MIDX
+    mode, proposal = steps_mod.resolve_proposal(cfg, head_mode)
     key = jax.random.PRNGKey(seed)
     k_init, k_index, k_loop = jax.random.split(key, 3)
     horizon = total_steps or steps
@@ -118,11 +121,12 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
     if vp > 1:
         # vocab-parallel layout (DESIGN §9): class tables + MIDX index
         # row-shard over the vocab axis; its own step/init/refresh family
-        if (head_mode or cfg.head.mode) != "midx":
+        if mode != "midx":
             raise ValueError("vocab-parallel training requires the midx head")
         if grad_transport != "fp32":
             raise ValueError("compressed grad transports are not wired into "
                              "the vocab-parallel step; use fp32")
+    returns_state = False   # True only for trainable proposals (single-dev)
     if mesh is not None:
         dp, _ = mesh_dp_tp(mesh)
         data_axes = tuple(a for a in mesh.axis_names
@@ -140,31 +144,43 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
                 grad_transport=grad_transport, head_mode=head_mode,
                 fused_head=fused_head, interpret=fused_interpret))
     else:
-        train_step = jax.jit(steps_mod.make_train_step(
+        step_fn = steps_mod.make_train_step(
             cfg, optimizer, head_mode=head_mode, fused_head=fused_head,
-            interpret=fused_interpret))
+            interpret=fused_interpret)
+        # read BEFORE jit: the jit wrapper drops closure attributes
+        returns_state = getattr(step_fn, "returns_state", False)
+        train_step = jax.jit(step_fn)
     if vp > 1:
         index = jax.jit(steps_mod.make_vocab_index_init(cfg, mesh))(
             params, k_index)
+    elif proposal is not None:
+        # generic contender: unigram-family proposals want the corpus
+        # frequency; everyone else ignores it
+        freq = np.bincount(np.asarray(corpus).reshape(-1),
+                           minlength=cfg.padded_vocab).astype(np.float64)
+        index = heads.init_proposal_state(cfg, params, k_index, proposal,
+                                          freq)
     else:
         index = heads.init_head_state(cfg, params, k_index)
     ef = steps_mod.init_grad_transport_state(params, grad_transport, dp)
-    # index lifecycle (DESIGN §8): the refresh for step s runs on dispatch
-    # while up to `refresh_lag` subsequent steps train against the old index;
-    # on a mesh the rebuild is sharded over the data axes (vp > 1: each vocab
-    # shard refits its own subindex natively — no all-gather)
+    # head-state lifecycle (DESIGN §8): the refresh for step s runs on
+    # dispatch while up to `refresh_lag` subsequent steps train against the
+    # old state; on a mesh the MIDX rebuild is sharded over the data axes
+    # (vp > 1: each vocab shard refits its own subindex natively — no
+    # all-gather). Generic adaptive proposals refresh replicated.
     if vp > 1:
         refresh = jax.jit(steps_mod.make_vocab_refresh_step(cfg, mesh))
-    elif mesh is not None:
+    elif mesh is not None and proposal is None:
         refresh = jax.jit(steps_mod.make_refresh_step(
             cfg, mesh, data_axes=tuple(a for a in mesh.axis_names
                                        if a != "model")))
     else:
-        refresh = jax.jit(steps_mod.make_refresh_step(cfg))
+        refresh = jax.jit(steps_mod.make_refresh_step(cfg, head_mode=mode))
     lifecycle = IndexLifecycle(
         refresh, every=cfg.head.refresh_every, lag=cfg.head.refresh_lag,
         base_key=k_index,
-        enabled=(head_mode or cfg.head.mode) == "midx")
+        enabled=(mode == "midx") or (proposal is not None
+                                     and proposal.adaptive))
 
     ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
     start_step = 0
@@ -188,6 +204,9 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
         elif mesh is not None:
             params, opt_state, metrics, ef = train_step(
                 params, opt_state, index, batch, k_step, ef)
+        elif returns_state:
+            params, opt_state, index, metrics = train_step(
+                params, opt_state, index, batch, k_step)
         else:
             params, opt_state, metrics = train_step(params, opt_state, index,
                                                     batch, k_step)
@@ -201,8 +220,8 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
         if ev is not None:
             print(f"[train] refresh @{ev.step} (swap @{ev.swap_step}) "
                   f"mode={ev.mode} {ev.seconds:.3f}s "
-                  f"reassigned={ev.metrics['reassigned_frac']:.3f} "
-                  f"drift={ev.metrics['codeword_drift']:.3f}")
+                  f"reassigned={float(ev.metrics.get('reassigned_frac', 0.0)):.3f} "
+                  f"drift={float(ev.metrics.get('codeword_drift', 0.0)):.3f}")
             if on_refresh:
                 on_refresh(ev)
         if step % log_every == 0 or step == steps - 1:
@@ -249,7 +268,12 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--reduced", action="store_true",
                     help="use the reduced (CPU smoke) config")
-    ap.add_argument("--head", default=None, choices=(None, "midx", "full"))
+    from repro.proposals import proposal_modes
+    ap.add_argument("--head", default=None,
+                    choices=(None, *proposal_modes()),
+                    help="head mode: midx/full use the dedicated heads; any "
+                         "other repro.proposals contender routes through "
+                         "the generic sampled-softmax seam")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--dp", type=int, default=0,

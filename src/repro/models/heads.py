@@ -1,10 +1,16 @@
-"""LM heads: full softmax vs MIDX sampled softmax (the paper's technique).
+"""LM heads: full softmax vs sampled softmax over any proposal (DESIGN §10).
 
 Train-time losses:
-  loss_full : [T,V] logits + CE — the O(V·D) baseline the paper replaces.
-  loss_midx : MIDX-sampled CE — O((M+K²)·D) per token/sequence.
-Also `midx_head_state` management (index refresh cadence) and an approximate
-MIDX decode head (beyond-paper application: O(K²+M·D) next-token sampling).
+  loss_full    : [T,V] logits + CE — the O(V·D) baseline the paper replaces.
+  loss_midx    : MIDX-sampled CE — O((M+K²)·D) per token/sequence; the
+                 paper's technique and the fused-kernel fast lane.
+  loss_sampled : the generic seam — any repro.proposals contender. MIDX-
+                 backed proposals short-circuit to loss_midx, so the
+                 registry-routed MIDX path is bit-identical to the
+                 pre-refactor head (tests/test_proposals.py parity guard).
+Also head-state management (index/proposal refresh cadence) and the decode
+heads: `midx_decode_head` (the O(K²+M·D) serving hot path) plus its generic
+`proposal_decode_head` counterpart.
 """
 from __future__ import annotations
 
@@ -144,6 +150,79 @@ def _masked_mean(loss: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
     return jnp.mean(loss)
 
 
+# --------------------------------------------------------- generic proposals
+def _midx_index_of(proposal, state):
+    """The MultiIndex behind a midx-backed proposal state, or None.
+
+    midx-pq/rq keep the index AS the state; midx-learnable derives one from
+    the trained codebooks. midx-exact-* is NOT a fast-lane candidate — its
+    sampling distribution is the exact softmax, not the index proposal."""
+    if proposal is None:
+        return state
+    if proposal.name in ("midx-pq", "midx-rq"):
+        return state
+    if proposal.name.startswith("midx-learnable"):
+        return state["index"]
+    return None
+
+
+def init_proposal_state(cfg: ModelConfig, params: dict, key: jax.Array,
+                        proposal, class_freq: Optional[jax.Array] = None):
+    """Proposal-state counterpart of init_head_state (any contender)."""
+    table = class_embeddings(cfg, params).astype(jnp.float32)
+    return proposal.init(key, table, class_freq)
+
+
+def refresh_proposal_state(cfg: ModelConfig, params: dict, proposal, state,
+                           key: jax.Array):
+    """Refresh any proposal's state against the current class table."""
+    table = class_embeddings(cfg, params).astype(jnp.float32)
+    return proposal.refresh(state, key, table)
+
+
+def loss_sampled(cfg: ModelConfig, params: dict, proposal, state,
+                 hidden: jax.Array, labels: jax.Array, key: jax.Array,
+                 mask: Optional[jax.Array] = None, *,
+                 fused: Optional[bool] = None,
+                 interpret: bool = False) -> jax.Array:
+    """Sampled softmax CE through ANY registered proposal (DESIGN §10).
+
+    MIDX-backed contenders (midx-pq/rq, midx-learnable-*) short-circuit to
+    `loss_midx` — the fused Pallas fast lane — with their MultiIndex as the
+    head state, so the registry route stays bit-identical to the dedicated
+    MIDX head. Everything else runs the reference jnp formulation:
+
+      per_token        draws [B,S,M] negatives from q(·|h_t) per position
+      pooled / mixture draws [B,M] shared negatives from q(·|z̄) with
+                       z̄ = mean_t h_t (generic proposals have no per-token
+                       mixture form, so 'mixture' uses the pooled query too)
+    """
+    idx = _midx_index_of(proposal, state)
+    if idx is not None:
+        return loss_midx(cfg, params, idx, hidden, labels, key, mask,
+                         fused=fused, interpret=interpret)
+    table = class_embeddings(cfg, params)
+    m = cfg.head.num_negatives
+    h32 = hidden.astype(jnp.float32)
+    if cfg.head.proposal == "per_token":
+        draw = proposal.sample(state, key, h32, m)            # ids [B,S,M]
+        pos_logit = jnp.sum(h32 * table[labels].astype(jnp.float32), axis=-1)
+        neg_e = table[draw.ids].astype(jnp.float32)           # [B,S,M,D]
+        neg_logits = jnp.einsum("bsd,bsmd->bsm", h32, neg_e)
+        log_q, neg_ids = draw.log_q, draw.ids
+    else:
+        z_bar = jnp.mean(h32, axis=-2)                        # [B,D]
+        draw = proposal.sample(state, key, z_bar, m)          # ids [B,M]
+        pos_logit = jnp.sum(h32 * table[labels].astype(jnp.float32), axis=-1)
+        neg_e = table[draw.ids].astype(jnp.float32)           # [B,M,D]
+        neg_logits = jnp.einsum("bsd,bmd->bsm", h32, neg_e)
+        log_q = draw.log_q[:, None, :]                        # broadcast S
+        neg_ids = draw.ids[:, None, :]
+    loss = sampled_softmax_loss(pos_logit, neg_logits, log_q, neg_ids, labels,
+                                cfg.head.mask_collisions)
+    return _masked_mean(loss, mask)
+
+
 class MidxDecodeOut(NamedTuple):
     token: jax.Array      # [B] sampled next token
     log_q: jax.Array      # [B] proposal log-prob
@@ -182,6 +261,37 @@ def midx_decode_head(cfg: ModelConfig, params: dict, index: MultiIndex,
     draw = midx_mod.sample_twostage(index, k_draw, h, num_candidates,
                                     tables_fn=tables_fn)       # [B,M]
     # cast per gathered row — never the whole [V, D] table (DESIGN §3)
+    cand_e = table[draw.ids].astype(jnp.float32)              # [B,M,D]
+    logits = jnp.einsum("bd,bmd->bm", h, cand_e) / temperature
+    corrected = logits - draw.log_q                           # IS-corrected
+    pick = jax.random.categorical(k_pick, corrected, axis=-1) # [B]
+    token = jnp.take_along_axis(draw.ids, pick[:, None], axis=-1)[:, 0]
+    lq = jnp.take_along_axis(draw.log_q, pick[:, None], axis=-1)[:, 0]
+    return MidxDecodeOut(token, lq)
+
+
+def proposal_decode_head(cfg: ModelConfig, params: dict, proposal, state,
+                         hidden: jax.Array, key: jax.Array,
+                         num_candidates: Optional[int] = None,
+                         temperature: Optional[float] = None, *,
+                         fused: Optional[bool] = None,
+                         interpret: bool = False) -> MidxDecodeOut:
+    """midx_decode_head generalized to any proposal: draw candidates from
+    q(·|h), rescore exactly, IS-correct, sample. MIDX-backed states keep the
+    dedicated (fused-kernel-capable) path."""
+    idx = _midx_index_of(proposal, state)
+    if idx is not None:
+        return midx_decode_head(cfg, params, idx, hidden, key,
+                                num_candidates, temperature,
+                                fused=fused, interpret=interpret)
+    if num_candidates is None:
+        num_candidates = cfg.head.decode_candidates
+    if temperature is None:
+        temperature = cfg.head.decode_temperature
+    table = class_embeddings(cfg, params)
+    h = hidden.astype(jnp.float32)
+    k_draw, k_pick = jax.random.split(key)
+    draw = proposal.sample(state, k_draw, h, num_candidates)  # [B,M]
     cand_e = table[draw.ids].astype(jnp.float32)              # [B,M,D]
     logits = jnp.einsum("bd,bmd->bm", h, cand_e) / temperature
     corrected = logits - draw.log_q                           # IS-corrected

@@ -1,0 +1,18 @@
+"""repro.proposals — the proposal-distribution subsystem (DESIGN §10).
+
+Every sampled-softmax contender lives here behind one `Proposal` protocol;
+train, serve, and the index lifecycle dispatch through `make_proposal` /
+`from_config`. `repro.core.samplers` is a compatibility shim over this
+package (Sampler is an alias of Proposal).
+"""
+from repro.proposals.base import (Draw, Proposal, categorical_draw,
+                                  emb_refresh, no_refresh)
+from repro.proposals.registry import (PROPOSAL_NAMES, from_config,
+                                      make_proposal, proposal_modes,
+                                      validate_mode)
+
+__all__ = [
+    "Draw", "Proposal", "categorical_draw", "emb_refresh", "no_refresh",
+    "PROPOSAL_NAMES", "make_proposal", "from_config", "proposal_modes",
+    "validate_mode",
+]

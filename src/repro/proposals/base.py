@@ -1,0 +1,74 @@
+"""The Proposal protocol — one interface every sampler contender implements.
+
+A proposal is the distribution Q(i|z) negatives are drawn from in the sampled
+softmax; the paper's theory (Theorems 5/13) says KL(softmax ‖ Q) controls the
+estimator's bias, convergence, and generalization, so the whole training /
+serving / lifecycle stack talks to proposals through this one seam
+(DESIGN §10):
+
+  init(key, class_emb, class_freq=None) -> state        (pytree)
+  sample(state, key, z, m)              -> Draw(ids [..., m], log_q [..., m])
+  log_prob(state, z, ids)               -> log q(ids | z)
+  refresh(state, key, class_emb)        -> state
+
+`state` is always a pytree, so it passes through jit / shard_map / the
+IndexLifecycle double buffer unchanged. Two optional capabilities extend the
+protocol:
+
+  adaptive   — refresh() actually tracks the moving class table (MIDX k-means
+               refit, RFF feature re-map, TAPAS pass-1 pool redraw); the
+               train loop enables the IndexLifecycle only for these.
+  trainable  — state carries gradient-trained leaves (learnable codebooks);
+               `split_trainable`/`merge_trainable` expose them to
+               value_and_grad and `aux_loss` contributes the L_recon + L_KL
+               objective of paper §6.2.3 to the train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.midx import Draw
+
+__all__ = ["Draw", "Proposal", "categorical_draw"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Proposal:
+    """One registered sampled-softmax proposal (see module docstring).
+
+    `aux_loss(state, key, z2d, class_emb) -> (loss, metrics)` and the
+    split/merge pair are only set when `trainable` is True; `aux_loss` is
+    differentiable w.r.t. the trainable leaves of `state`.
+    """
+    name: str
+    init: Callable[..., Any]
+    sample: Callable[..., Draw]
+    log_prob: Callable[..., jax.Array]
+    refresh: Callable[..., Any]
+    adaptive: bool = False
+    trainable: bool = False
+    aux_loss: Optional[Callable] = None
+    split_trainable: Optional[Callable] = None
+    merge_trainable: Optional[Callable] = None
+
+
+def categorical_draw(key: jax.Array, log_p: jax.Array, m: int) -> Draw:
+    """m iid categorical draws per row of log_p [..., N] -> Draw [..., m]."""
+    ids = jax.random.categorical(key, log_p[..., None, :], axis=-1,
+                                 shape=(*log_p.shape[:-1], m))
+    log_q = jnp.take_along_axis(log_p, ids, axis=-1)
+    return Draw(ids.astype(jnp.int32), log_q)
+
+
+def no_refresh(state, key, class_emb):
+    """Refresh for static proposals: the state does not track the table."""
+    return state
+
+
+def emb_refresh(state, key, class_emb):
+    """Refresh for proposals whose only table-dependence is state['emb']."""
+    return {**state, "emb": class_emb}

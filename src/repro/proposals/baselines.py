@@ -1,0 +1,81 @@
+"""Adaptive O(N·D) baselines: sphere kernel and LSH.
+
+sphere — Blanc & Rendle 2018's quadratic-kernel sampler: q(i|z) ∝ α·o_i² + 1.
+LSH    — SimHash bucket proposal (Spring & Shrivastava 2017): average of
+         per-table bucket-uniform distributions, ε-mixed with uniform.
+
+Both score every class per query — faithful to the paper's own GPU baselines
+("does not use tree structures"); they are comparison points, not the
+contribution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.proposals.base import categorical_draw
+
+
+# ---------------------------------------------------------------------- sphere
+def sphere_init(key, class_emb, class_freq=None, alpha: float = 100.0):
+    return {"emb": class_emb, "alpha": jnp.float32(alpha)}
+
+
+def sphere_log_p(state, z):
+    o = z.astype(jnp.float32) @ state["emb"].T.astype(jnp.float32)
+    w = state["alpha"] * o * o + 1.0
+    return jnp.log(w) - jnp.log(jnp.sum(w, axis=-1, keepdims=True))
+
+
+def sphere_sample(state, key, z, m):
+    return categorical_draw(key, sphere_log_p(state, z), m)
+
+
+def sphere_log_prob(state, z, ids):
+    return jnp.take_along_axis(sphere_log_p(state, z), ids, axis=-1)
+
+
+# ---------------------------------------------------------------------- LSH
+def lsh_init(key, class_emb, class_freq=None, tables: int = 16, bits: int = 4,
+             eps: float = 0.1):
+    d = class_emb.shape[-1]
+    planes = jax.random.normal(key, (tables, bits, d), jnp.float32)
+    codes = lsh_codes(planes, class_emb).T                        # [T, N]
+    n_buckets = 2 ** bits
+    sizes = jax.vmap(lambda c: jnp.zeros(n_buckets, jnp.int32).at[c].add(1))(codes)
+    return {"planes": planes, "codes": codes, "sizes": sizes,
+            "eps": jnp.float32(eps), "n": class_emb.shape[0]}
+
+
+def lsh_codes(planes, x):
+    # [T, bits, D] @ [..., D] -> sign bits -> integer bucket code
+    proj = jnp.einsum("tbd,...d->...tb", planes, x.astype(jnp.float32))
+    bits = (proj > 0).astype(jnp.int32)
+    weights = 2 ** jnp.arange(planes.shape[1], dtype=jnp.int32)
+    return jnp.sum(bits * weights, axis=-1)                       # [..., T]
+
+
+def lsh_log_p(state, z):
+    zc = lsh_codes(state["planes"], z)                            # [..., T]
+    match = (state["codes"] == zc[..., :, None])                  # [..., T, N]
+    t = state["codes"].shape[0]
+    bucket_sz = state["sizes"][jnp.arange(t), zc]                 # [..., T]
+    per_table = match.astype(jnp.float32) / jnp.maximum(bucket_sz, 1)[..., None]
+    p = jnp.mean(per_table, axis=-2)                              # [..., N]
+    p = (1.0 - state["eps"]) * p + state["eps"] / state["n"]
+    return jnp.log(p) - jnp.log(jnp.sum(p, axis=-1, keepdims=True))
+
+
+def lsh_sample(state, key, z, m):
+    return categorical_draw(key, lsh_log_p(state, z), m)
+
+
+def lsh_log_prob(state, z, ids):
+    return jnp.take_along_axis(lsh_log_p(state, z), ids, axis=-1)
+
+
+def lsh_refresh(state, key, class_emb):
+    codes = lsh_codes(state["planes"], class_emb).T
+    n_buckets = state["sizes"].shape[-1]
+    sizes = jax.vmap(lambda c: jnp.zeros(n_buckets, jnp.int32).at[c].add(1))(codes)
+    return {**state, "codes": codes, "sizes": sizes}

@@ -1,0 +1,84 @@
+"""Learnable-codebook proposal (paper §6.2.3) — the trainable contender.
+
+K-means init (the paper's warm start), then the codewords C¹,C² train jointly
+with the model through the auxiliary objective
+    L_aux = w_r·L_recon + w_k·L_KL
+(repro.core.learnable): L_recon pulls soft reconstructions toward the table,
+L_KL directly shrinks the proposal-vs-softmax divergence that Theorems 5/13
+tie to estimator bias. The train step exposes the codebooks to
+value_and_grad via split/merge (steps.make_train_step's trainable path);
+`refresh` hard-assigns classes against the LEARNED codewords
+(index_from_learnable — assign-only, no k-means) so the sampling index
+follows the gradient-trained geometry.
+
+State: {"cb": LearnableCodebooks (trainable), "index": MultiIndex (derived)}.
+Sampling and log_prob go through the index, same as midx.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import midx as midx_mod
+from repro.core.learnable import (codebook_losses, from_index,
+                                  index_from_learnable)
+from repro.index import build as index_build
+
+
+def learnable_init_factory(kind: str, k: int, iters: int = 10):
+    def init(key, class_emb, class_freq=None):
+        idx = index_build(key, class_emb.astype(jnp.float32),
+                          kind=kind, k=k, iters=iters)
+        return {"cb": from_index(idx), "index": idx}
+    return init
+
+
+def learnable_sample(state, key, z, m):
+    return midx_mod.sample_twostage(state["index"], key, z, m)
+
+
+def learnable_log_prob(state, z, ids):
+    return midx_mod.log_prob(state["index"], z, ids)
+
+
+def learnable_refresh(state, key, class_emb):
+    idx = index_from_learnable(state["cb"],
+                               class_emb.astype(jnp.float32))
+    return {"cb": state["cb"], "index": idx}
+
+
+def learnable_aux_factory(recon_weight: float = 1.0, kl_weight: float = 1.0,
+                          max_queries: int = 64, max_classes: int = 512):
+    """aux_loss(state, key, z2d, class_emb) -> (loss, metrics).
+
+    Row-subsamples queries/classes so the z@Cᵀ KL term stays O(q·c) per step
+    at any vocab; gradients flow into the codebooks only (query/table are
+    stop-gradded — the auxiliary objective trains the proposal, it must not
+    perturb the model's own loss surface).
+    """
+    def aux_loss(state, key, z2d, class_emb):
+        z = jax.lax.stop_gradient(z2d.astype(jnp.float32))
+        q = jax.lax.stop_gradient(class_emb.astype(jnp.float32))
+        kq, kc = jax.random.split(key)
+        if z.shape[0] > max_queries:
+            rows = jax.random.choice(kq, z.shape[0], (max_queries,),
+                                     replace=False)
+            z = z[rows]
+        if q.shape[0] > max_classes:
+            rows = jax.random.choice(kc, q.shape[0], (max_classes,),
+                                     replace=False)
+            q = q[rows]
+        loss, metrics = codebook_losses(state["cb"], z, q,
+                                        recon_weight, kl_weight)
+        return loss, {"prop_recon": metrics["recon"],
+                      "prop_kl": metrics["kl"]}
+
+    return aux_loss
+
+
+def learnable_split(state):
+    return state["cb"], {"index": state["index"]}
+
+
+def learnable_merge(trainable, rest):
+    return {"cb": trainable, "index": rest["index"]}

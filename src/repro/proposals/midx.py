@@ -1,0 +1,60 @@
+"""MIDX proposals (the paper's contribution) behind the Proposal protocol.
+
+State is the `MultiIndex` itself (midx-pq / midx-rq) or {index, emb} for the
+exact Theorem-1 variant. Sampling goes through the two-stage O(K) draw; the
+training fast lane (fused kernels, pooled/mixture batching) does NOT go
+through Proposal.sample — heads.loss_sampled short-circuits midx-named
+proposals to `heads.loss_midx` so the Pallas path stays bit-identical to the
+pre-refactor head (the refactor parity guard in tests/test_proposals.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import midx as midx_mod
+from repro.index import build as index_build
+from repro.index import refresh as index_refresh
+
+
+def midx_init_factory(kind: str, k: int, iters: int = 10):
+    def init(key, class_emb, class_freq=None):
+        return index_build(key, class_emb.astype(jnp.float32),
+                           kind=kind, k=k, iters=iters)
+    return init
+
+
+def midx_sample(state, key, z, m):
+    # two-stage (O(K) per draw) — identical distribution to the flat K²
+    # categorical; see midx.sample_twostage vs midx.sample.
+    return midx_mod.sample_twostage(state, key, z, m)
+
+
+def midx_log_prob(state, z, ids):
+    return midx_mod.log_prob(state, z, ids)
+
+
+def midx_refresh(state, key, class_emb):
+    return index_refresh(state, key, class_emb.astype(jnp.float32))
+
+
+def midx_exact_init_factory(kind: str, k: int, iters: int = 10):
+    def init(key, class_emb, class_freq=None):
+        idx = index_build(key, class_emb.astype(jnp.float32),
+                          kind=kind, k=k, iters=iters)
+        return {"index": idx, "emb": class_emb}
+    return init
+
+
+def midx_exact_sample(state, key, z, m):
+    return midx_mod.sample_exact(state["index"], key, z, state["emb"], m)
+
+
+def midx_exact_log_prob(state, z, ids):
+    lp = midx_mod.exact_log_prob(state["index"], z, state["emb"])
+    return jnp.take_along_axis(lp, ids, axis=-1)
+
+
+def midx_exact_refresh(state, key, class_emb):
+    idx = index_refresh(state["index"], key,
+                        class_emb.astype(jnp.float32))
+    return {"index": idx, "emb": class_emb}

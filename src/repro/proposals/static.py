@@ -1,0 +1,67 @@
+"""Static / query-independent proposals: uniform, unigram (Vose alias), full.
+
+`full` is the exact softmax "proposal" — O(N·D) per query, the unbiased
+reference the sampled estimators are compared against (its refresh keeps the
+embedding snapshot current, so it is marked adaptive).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.alias import AliasTable, build_alias, sample_alias
+from repro.proposals.base import Draw, categorical_draw
+
+
+# ---------------------------------------------------------------------- uniform
+def uniform_init(key, class_emb, class_freq=None):
+    return {"n": class_emb.shape[0]}
+
+
+def uniform_sample(state, key, z, m):
+    n = state["n"]
+    ids = jax.random.randint(key, (*z.shape[:-1], m), 0, n).astype(jnp.int32)
+    logn = jnp.log(jnp.asarray(n, jnp.float32))     # jit-safe if n is traced
+    return Draw(ids, jnp.broadcast_to(-logn, ids.shape))
+
+
+def uniform_log_prob(state, z, ids):
+    logn = jnp.log(jnp.asarray(state["n"], jnp.float32))
+    return jnp.broadcast_to(-logn, ids.shape)
+
+
+# ---------------------------------------------------------------------- unigram
+def unigram_init(key, class_emb, class_freq=None):
+    n = class_emb.shape[0]
+    freq = np.ones(n) if class_freq is None else np.asarray(class_freq,
+                                                            np.float64)
+    return {"table": build_alias(freq + 1e-12)}
+
+
+def unigram_sample(state, key, z, m):
+    t: AliasTable = state["table"]
+    ids = sample_alias(key, t, (*z.shape[:-1], m))
+    return Draw(ids, t.logq[ids])
+
+
+def unigram_log_prob(state, z, ids):
+    return state["table"].logq[ids]
+
+
+# ---------------------------------------------------------------------- full
+def full_init(key, class_emb, class_freq=None):
+    return {"emb": class_emb}
+
+
+def full_log_p(state, z):
+    o = z.astype(jnp.float32) @ state["emb"].T.astype(jnp.float32)
+    return jax.nn.log_softmax(o, axis=-1)
+
+
+def full_sample(state, key, z, m):
+    return categorical_draw(key, full_log_p(state, z), m)
+
+
+def full_log_prob(state, z, ids):
+    return jnp.take_along_axis(full_log_p(state, z), ids, axis=-1)

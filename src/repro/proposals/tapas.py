@@ -1,0 +1,95 @@
+"""TAPAS two-pass adaptive sampling (Bai et al. 2017).
+
+Pass 1 (offline, refresh-time): cache a candidate pool of P classes drawn
+without replacement ∝ unigram frequency — the cheap, query-independent pass.
+Pass 2 (online, per query): softmax over the pool's exact logits restricted
+to the cached candidates — the adaptive, query-dependent pass.
+
+The proposal is the ε-mixture
+    q(i|z) = ε/N + (1−ε) · softmax_pool(z·c_i) · 1[i ∈ pool]
+which is exactly normalized over all N classes (the uniform floor keeps
+off-pool classes reachable, so log_prob is finite everywhere and the IS
+correction never divides by zero). `refresh` redraws the pool — the pass-1
+cache is what the IndexLifecycle maintains for this contender.
+
+State: {pool [P] ids, slot [N] inverse map (−1 off-pool), emb, freq_logits,
+eps, n}. Sampling is O(P·D) per query instead of O(N·D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.proposals.base import Draw
+
+
+def _draw_pool(key, freq_logits, pool: int):
+    """Pass 1: P candidates without replacement ∝ exp(freq_logits), via
+    Gumbel top-k (jit-safe, no host numpy)."""
+    g = jax.random.gumbel(key, freq_logits.shape)
+    _, ids = jax.lax.top_k(freq_logits + g, pool)
+    return ids.astype(jnp.int32)
+
+
+def _pool_state(key, class_emb, freq_logits, pool: int, eps: float):
+    n = class_emb.shape[0]
+    ids = _draw_pool(key, freq_logits, pool)
+    slot = jnp.full((n,), -1, jnp.int32).at[ids].set(
+        jnp.arange(pool, dtype=jnp.int32))
+    return {"pool": ids, "slot": slot, "emb": class_emb,
+            "freq_logits": freq_logits, "eps": jnp.float32(eps),
+            "n": n}
+
+
+def tapas_init_factory(pool: int = 256, eps: float = 0.05):
+    def init(key, class_emb, class_freq=None):
+        n = class_emb.shape[0]
+        p = min(pool, n)
+        if class_freq is None:
+            freq_logits = jnp.zeros((n,), jnp.float32)
+        else:
+            f = jnp.asarray(class_freq, jnp.float32)
+            freq_logits = jnp.log(jnp.maximum(f, 1e-12))
+        return _pool_state(key, class_emb, freq_logits, p, eps)
+    return init
+
+
+def _pool_log_sm(state, z):
+    """log softmax over the pool's exact logits. [..., P]"""
+    pe = state["emb"][state["pool"]].astype(jnp.float32)         # [P, D]
+    o = z.astype(jnp.float32) @ pe.T                             # [..., P]
+    return jax.nn.log_softmax(o, axis=-1)
+
+
+def tapas_log_prob(state, z, ids):
+    lp_pool = _pool_log_sm(state, z)                             # [..., P]
+    slot = state["slot"][ids]                                    # [..., m]
+    on_pool = slot >= 0
+    lp_sel = jnp.take_along_axis(lp_pool, jnp.maximum(slot, 0), axis=-1)
+    eps, n = state["eps"], state["n"]
+    floor = eps / jnp.asarray(n, jnp.float32)
+    q = floor + jnp.where(on_pool, (1.0 - eps) * jnp.exp(lp_sel), 0.0)
+    return jnp.log(q)
+
+
+def tapas_sample(state, key, z, m):
+    k_branch, k_unif, k_pool = jax.random.split(key, 3)
+    lead = (*z.shape[:-1], m)
+    # ε-branch: uniform over all N; else pass-2 softmax over the pool
+    use_unif = jax.random.bernoulli(k_branch, state["eps"], lead)
+    unif = jax.random.randint(k_unif, lead, 0, state["n"]).astype(jnp.int32)
+    lp_pool = _pool_log_sm(state, z)                             # [..., P]
+    sel = jax.random.categorical(k_pool, lp_pool[..., None, :], axis=-1,
+                                 shape=lead)
+    from_pool = state["pool"][sel]
+    ids = jnp.where(use_unif, unif, from_pool)
+    return Draw(ids.astype(jnp.int32), tapas_log_prob(state, z, ids))
+
+
+def tapas_refresh(state, key, class_emb):
+    """Redraw the pass-1 candidate pool and take the current table.
+
+    jit-safe (the lifecycle jits it): pool size comes from the static shape,
+    eps stays the traced leaf it already is."""
+    return _pool_state(key, class_emb, state["freq_logits"],
+                       int(state["pool"].shape[0]), state["eps"])

@@ -70,9 +70,17 @@ class EngineStats:
         return out
 
 
-def _sample_tokens(cfg, params, index, hidden, keys, head: str):
+def _sample_tokens(cfg, params, index, hidden, keys, head: str,
+                   proposal=None):
     """Per-slot next-token draws. hidden [B,D], keys [B] — each slot samples
-    under its own key so draws never depend on batch composition."""
+    under its own key so draws never depend on batch composition. `proposal`
+    set -> the generic candidate-rescore head (heads.proposal_decode_head);
+    head == 'midx' -> the dedicated MIDX path; else exact [B,V] logits."""
+    if proposal is not None:
+        def one(h, k):
+            return heads.proposal_decode_head(
+                cfg, params, proposal, index, h[None], k).token[0]
+        return jax.vmap(one)(hidden, keys)
     if head == "midx":
         def one(h, k):
             return heads.midx_decode_head(cfg, params, index, h[None], k).token[0]
@@ -90,10 +98,14 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params: Optional[dict] = None, *,
                  index=None, head: str = "midx", window: Optional[int] = None,
                  attn_fn=None, init_key: Optional[jax.Array] = None):
-        if head not in ("midx", "full"):
-            raise ValueError(head)
+        from repro.proposals import registry as proposals_registry
+        proposals_registry.validate_mode(head)
         self.cfg = cfg
         self.head = head
+        # 'midx'/'full' keep their dedicated decode paths; any other
+        # registered contender serves through the generic proposal head
+        self.proposal = (None if head in ("midx", "full")
+                         else proposals_registry.from_config(cfg.head, head))
         self.window = window
         self.attn_fn = attn_fn
         sv = cfg.serve
@@ -105,6 +117,9 @@ class Engine:
                                       # frozen params reproduce the index
         if head == "midx" and self.index is None:
             self.index = heads.init_head_state(cfg, self.params, k_idx)
+        elif self.proposal is not None and self.index is None:
+            self.index = heads.init_proposal_state(cfg, self.params, k_idx,
+                                                   self.proposal)
         self._pending_swap = None     # (at_decode_step, index) | None
         self.pool = PagePool(sv.resolved_num_pages, sv.page_size,
                              sv.pages_per_slot, sv.max_slots)
@@ -118,11 +133,14 @@ class Engine:
         # issues no per-slot host dispatches
         self._base_keys = jnp.zeros((sv.max_slots, 2), jnp.uint32)
 
+        proposal = self.proposal
+
         def step_fn(params, index, state, tokens, pos, base_keys, active):
             hidden, state = paged_decode_step(cfg, params, tokens, pos, state,
                                               window=window, attn_fn=attn_fn)
             keys = jax.vmap(jax.random.fold_in)(base_keys, pos)
-            nxt = _sample_tokens(cfg, params, index, hidden, keys, head)
+            nxt = _sample_tokens(cfg, params, index, hidden, keys, head,
+                                 proposal)
             return jnp.where(active, nxt, 0), state
 
         # donate the state: the pool scatter aliases in place instead of
@@ -130,7 +148,7 @@ class Engine:
         self._step = jax.jit(step_fn, donate_argnums=(2,))
         self._first_token = jax.jit(
             lambda params, index, hidden, keys:
-            _sample_tokens(cfg, params, index, hidden, keys, head))
+            _sample_tokens(cfg, params, index, hidden, keys, head, proposal))
         # compiles once per prompt-length bucket (groups are padded)
         self._prefill = jax.jit(
             lambda params, toks, **kw:
@@ -140,13 +158,24 @@ class Engine:
     @classmethod
     def from_checkpoint(cls, cfg: ModelConfig, root: str, *,
                         step: Optional[int] = None, **kw) -> "Engine":
-        """Restore params + MIDX index saved by `save_checkpoint` (or by
+        """Restore params + head state saved by `save_checkpoint` (or by
         `launch.train`'s serving export) and build an engine around them."""
+        from repro.proposals import registry as proposals_registry
+        head = kw.get("head", "midx")
+        proposals_registry.validate_mode(head)
         like_p = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
-        like_i = jax.eval_shape(
-            lambda: heads.init_head_state(
+        if head in ("midx", "full"):
+            like_i = jax.eval_shape(
+                lambda: heads.init_head_state(
+                    cfg, init_params(cfg, jax.random.PRNGKey(0)),
+                    jax.random.PRNGKey(1)))
+        else:
+            # concrete, not eval_shape: proposal init may run host-side code
+            # (the unigram Vose alias build) that cannot trace abstractly
+            prop = proposals_registry.from_config(cfg.head, head)
+            like_i = heads.init_proposal_state(
                 cfg, init_params(cfg, jax.random.PRNGKey(0)),
-                jax.random.PRNGKey(1)))
+                jax.random.PRNGKey(1), prop)
         params, index, _ = restore_serving_state(root, like_p, like_i, step)
         return cls(cfg, params, index=index, **kw)
 
@@ -175,15 +204,18 @@ class Engine:
         self._pending_swap = (at_step, index)
 
     def rebuild_index(self, key: Optional[jax.Array] = None):
-        """Rebuild the MIDX index from the engine's current params.
+        """Rebuild the head state (MIDX index or proposal state) from the
+        engine's current params.
 
         With the default key this reproduces the construction the engine
-        booted with, so unchanged params yield a bit-identical index — the
+        booted with, so unchanged params yield a bit-identical state — the
         'unchanged index' swap. A training loop pushing updated params would
         pass its own refresh key here."""
-        return heads.init_head_state(self.cfg, self.params,
-                                     key if key is not None
-                                     else self._index_key)
+        k = key if key is not None else self._index_key
+        if self.proposal is not None:
+            return heads.init_proposal_state(self.cfg, self.params, k,
+                                             self.proposal)
+        return heads.init_head_state(self.cfg, self.params, k)
 
     def _maybe_swap(self) -> None:
         if self._pending_swap is not None and \

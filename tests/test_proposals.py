@@ -1,0 +1,252 @@
+"""Proposal subsystem (DESIGN §10): registry routing, MIDX parity guard,
+and protocol properties over every registered contender."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import steps as steps_mod
+from repro.models import heads, init_params
+from repro.optim import adamw
+from repro.proposals import (PROPOSAL_NAMES, make_proposal, proposal_modes,
+                             validate_mode)
+
+N, D, K = 160, 16, 4
+
+
+@pytest.fixture(scope="module")
+def emb():
+    key = jax.random.PRNGKey(0)
+    centers = jax.random.normal(key, (K, D)) * 2.0
+    cl = jax.random.randint(jax.random.PRNGKey(1), (N,), 0, K)
+    return centers[cl] + 0.1 * jax.random.normal(jax.random.PRNGKey(2), (N, D))
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("paper-lm").reduced().with_head(
+        num_negatives=16, proposal="per_token")
+
+
+@pytest.fixture(scope="module")
+def tiny_setup(tiny_cfg):
+    params = init_params(tiny_cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                     tiny_cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                     tiny_cfg.vocab_size),
+    }
+    return params, batch
+
+
+# ------------------------------------------------------------- mode routing
+def test_unknown_mode_raises(tiny_cfg):
+    """Satellite: the silent fallthrough is gone — unknown modes fail at
+    step-build time with the list of valid modes in the message."""
+    with pytest.raises(ValueError, match="unigram"):
+        validate_mode("bogus")
+    with pytest.raises(ValueError, match="bogus"):
+        steps_mod.resolve_proposal(tiny_cfg, "bogus")
+    with pytest.raises(ValueError):
+        steps_mod.make_train_step(tiny_cfg, adamw(1e-3), head_mode="typo")
+
+
+@pytest.mark.parametrize("mode,expected", [
+    ("midx", None), ("full", None),
+    ("uniform", "uniform"), ("unigram", "unigram"), ("sphere", "sphere"),
+    ("rff", "rff"), ("rff-fused", "rff-fused"), ("lsh", "lsh"),
+    ("tapas", "tapas"), ("midx-learnable", "midx-learnable-rq"),
+])
+def test_mode_pins_proposal(tiny_cfg, mode, expected):
+    """Each head mode resolves to exactly its proposal (regression for the
+    pre-refactor bug where every non-full mode trained the MIDX head)."""
+    assert mode in proposal_modes()
+    rmode, proposal = steps_mod.resolve_proposal(tiny_cfg, mode)
+    assert rmode == mode
+    if expected is None:
+        assert proposal is None          # dedicated lane, no Proposal object
+    else:
+        assert proposal.name == expected
+    step = steps_mod.make_train_step(tiny_cfg, adamw(1e-3), head_mode=mode)
+    got = step.proposal
+    assert (got is None) if expected is None else (got.name == expected)
+
+
+def test_unigram_mode_trains_with_unigram(tiny_cfg, tiny_setup):
+    """mode='unigram' must run the unigram proposal end to end: its state is
+    an alias table, which the old fallthrough would have fed to loss_midx
+    (shape error at best, silent MIDX training at worst)."""
+    params, batch = tiny_setup
+    step = steps_mod.make_train_step(tiny_cfg, adamw(1e-2),
+                                     head_mode="unigram")
+    assert step.proposal.name == "unigram"
+    assert not step.returns_state
+    freq = np.arange(1, tiny_cfg.padded_vocab + 1)[::-1].astype(np.float64)
+    state = heads.init_proposal_state(tiny_cfg, params, jax.random.PRNGKey(3),
+                                      step.proposal, freq)
+    # unigram state is alias-table-shaped, not a MultiIndex
+    assert not hasattr(state, "codebooks")
+    opt = adamw(1e-2)
+    p2, _, metrics = step(params, opt.init(params), state, batch,
+                          jax.random.PRNGKey(4))
+    assert np.isfinite(float(metrics["loss"]))
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, p2)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0.0
+
+
+# ---------------------------------------------------------- MIDX parity
+@pytest.mark.parametrize("ptype", ["per_token", "pooled", "mixture"])
+@pytest.mark.parametrize("fused", [False, True])
+def test_registry_midx_parity(tiny_cfg, tiny_setup, ptype, fused):
+    """Refactor guard: registry-routed MIDX == dedicated loss_midx, value and
+    grads, to 1e-6 — fused (interpret) and unfused, every proposal type."""
+    cfg = tiny_cfg.with_head(proposal=ptype)
+    params, batch = tiny_setup
+    index = heads.init_head_state(cfg, params, jax.random.PRNGKey(5))
+    proposal = make_proposal(f"midx-{cfg.head.quantizer}", k=cfg.head.midx_k)
+    hidden = jax.random.normal(jax.random.PRNGKey(6),
+                               (2, 8, cfg.d_model)) * 0.5
+    labels, key = batch["labels"], jax.random.PRNGKey(7)
+
+    def f_old(p):
+        return heads.loss_midx(cfg, p, index, hidden, labels, key,
+                               fused=fused, interpret=True)
+
+    def f_new(p):
+        return heads.loss_sampled(cfg, p, proposal, index, hidden, labels,
+                                  key, fused=fused, interpret=True)
+
+    v0, g0 = jax.value_and_grad(f_old)(params)
+    v1, g1 = jax.value_and_grad(f_new)(params)
+    assert abs(float(v0) - float(v1)) <= 1e-6
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# -------------------------------------------------------- protocol contract
+@pytest.mark.parametrize("name", PROPOSAL_NAMES)
+def test_proposal_contract(name, emb):
+    p = make_proposal(name, k=K, kmeans_iters=4, tapas_pool=32)
+    freq = np.random.default_rng(0).random(N) + 0.1
+    st = p.init(jax.random.PRNGKey(3), emb, freq)
+    z = jax.random.normal(jax.random.PRNGKey(4), (5, D))
+    d = p.sample(st, jax.random.PRNGKey(5), z, 12)
+    assert d.ids.shape == (5, 12) and d.log_q.shape == (5, 12)
+    assert bool(jnp.all((d.ids >= 0) & (d.ids < N)))
+    lp = p.log_prob(st, z, d.ids)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(d.log_q), atol=1e-4)
+    st2 = p.refresh(st, jax.random.PRNGKey(6), emb + 0.01)
+    d2 = p.sample(st2, jax.random.PRNGKey(7), z, 12)
+    assert d2.ids.shape == (5, 12)
+
+
+@pytest.mark.parametrize("name", PROPOSAL_NAMES)
+def test_proposal_normalized(name, emb):
+    """Σ_i q(i|z) == 1 over the whole (tiny) vocabulary, every contender."""
+    p = make_proposal(name, k=K, kmeans_iters=4, tapas_pool=32)
+    st = p.init(jax.random.PRNGKey(3), emb, np.ones(N))
+    z = jax.random.normal(jax.random.PRNGKey(4), (3, D))
+    ids = jnp.arange(N)[None].repeat(3, 0)
+    total = jnp.sum(jnp.exp(p.log_prob(st, z, ids)), axis=-1)
+    np.testing.assert_allclose(np.asarray(total), 1.0, atol=1e-3)
+
+
+@pytest.mark.parametrize("name", ["uniform", "unigram"])
+def test_static_refresh_idempotent(name, emb):
+    """Static proposals ignore refresh: identical state leaves out."""
+    p = make_proposal(name, k=K)
+    assert not p.adaptive
+    st = p.init(jax.random.PRNGKey(3), emb, np.ones(N) + 1.0)
+    st2 = p.refresh(st, jax.random.PRNGKey(6), emb * 3.0)
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_property_log_prob_matches_sample(emb):
+    """Hypothesis sweep: q(sampled ids | z) == reported log_q for every
+    contender across random queries/keys/sample sizes."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+
+    states = {}
+    for name in PROPOSAL_NAMES:
+        p = make_proposal(name, k=K, kmeans_iters=2, tapas_pool=32)
+        states[name] = (p, p.init(jax.random.PRNGKey(3), emb, np.ones(N)))
+
+    @given(seed=hst.integers(0, 2**16), m=hst.integers(1, 20),
+           name=hst.sampled_from(PROPOSAL_NAMES))
+    @settings(max_examples=30, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def check(seed, m, name):
+        p, st = states[name]
+        key = jax.random.PRNGKey(seed)
+        z = jax.random.normal(jax.random.fold_in(key, 0), (2, D))
+        d = p.sample(st, jax.random.fold_in(key, 1), z, m)
+        assert bool(jnp.all((d.ids >= 0) & (d.ids < N)))
+        assert bool(jnp.all(jnp.isfinite(d.log_q)))
+        lp = p.log_prob(st, z, d.ids)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(d.log_q),
+                                   atol=1e-4)
+
+    check()
+
+
+# ------------------------------------------------------ trainable proposals
+def test_learnable_train_step(tiny_cfg, tiny_setup):
+    """midx-learnable: step returns updated head state and the codebook
+    leaves actually move on the aux-loss gradient."""
+    params, batch = tiny_setup
+    step = steps_mod.make_train_step(tiny_cfg, adamw(1e-2),
+                                     head_mode="midx-learnable")
+    assert step.returns_state
+    assert step.proposal.trainable
+    state = heads.init_proposal_state(tiny_cfg, params, jax.random.PRNGKey(3),
+                                      step.proposal)
+    opt = adamw(1e-2)
+    p2, _, state2, metrics = step(params, opt.init(params), state, batch,
+                                  jax.random.PRNGKey(4))
+    assert np.isfinite(float(metrics["loss"]))
+    assert "prop_recon" in metrics and "prop_kl" in metrics
+    cb0 = jax.tree_util.tree_leaves(state["cb"])
+    cb1 = jax.tree_util.tree_leaves(state2["cb"])
+    assert any(float(jnp.max(jnp.abs(a - b))) > 0 for a, b in zip(cb0, cb1))
+    # non-trainable leaves (the derived index) are untouched by the SGD step
+    assert state2["index"] is not None
+
+
+def test_generic_refresh_step(tiny_cfg, tiny_setup):
+    """make_refresh_step routes non-MIDX modes through proposal.refresh and
+    reports the zeroed lifecycle metrics contract."""
+    params, batch = tiny_setup
+    refresh = steps_mod.make_refresh_step(tiny_cfg, head_mode="tapas")
+    mode, proposal = steps_mod.resolve_proposal(tiny_cfg, "tapas")
+    state = heads.init_proposal_state(tiny_cfg, params, jax.random.PRNGKey(3),
+                                      proposal)
+    state2, metrics = refresh(params, state, jax.random.PRNGKey(4))
+    assert set(metrics) >= {"reassigned_frac", "codeword_drift"}
+    z = jax.random.normal(jax.random.PRNGKey(5), (2, tiny_cfg.d_model))
+    d = proposal.sample(state2, jax.random.PRNGKey(6), z, 8)
+    assert d.ids.shape == (2, 8)
+
+
+def test_generic_decode_head(tiny_cfg, tiny_setup):
+    """proposal_decode_head: any contender can drive next-token sampling."""
+    params, _ = tiny_setup
+    mode, proposal = steps_mod.resolve_proposal(tiny_cfg, "tapas")
+    state = heads.init_proposal_state(tiny_cfg, params, jax.random.PRNGKey(3),
+                                      proposal)
+    h = jax.random.normal(jax.random.PRNGKey(4), (3, tiny_cfg.d_model))
+    out = heads.proposal_decode_head(tiny_cfg, params, proposal, state, h,
+                                     jax.random.PRNGKey(5),
+                                     num_candidates=16)
+    assert out.token.shape == (3,)
+    assert bool(jnp.all((out.token >= 0) & (out.token <
+                                            tiny_cfg.padded_vocab)))
+    assert bool(jnp.all(jnp.isfinite(out.log_q)))
