@@ -1,0 +1,102 @@
+"""resilience — cost of the recovery machinery under injected faults (§11).
+
+Three rows, the numbers the failure-model story is judged on:
+
+  resilience/restore_fallback   wall time of restore_latest_verified when
+                                the newest checkpoint is corrupt — the
+                                checksum walk-back the resumed job pays
+                                once at startup (derived: dirs walked).
+  resilience/rollback_cost      a NaN step mid-run escalates to a rollback;
+                                the row times the whole chaos run and
+                                reports the replayed-step count — the
+                                training cost of one recovery (derived:
+                                replayed steps vs clean horizon).
+  resilience/goodput_shedding   engine throughput over a flood against a
+                                bounded queue: completed tokens per second
+                                while the overflow is shed with structured
+                                rejections (derived: ok/shed split).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import ZipfLM
+from repro.resilience import FaultInjector, FaultSpec, GuardrailConfig
+from repro.serve import Engine
+
+
+def _restore_fallback(fast: bool):
+    import tempfile
+    d = tempfile.mkdtemp(prefix="bench_resilience_")
+    mgr = CheckpointManager(d, keep=8)
+    tree = {"w": jax.numpy.ones((512, 256) if fast else (2048, 1024)),
+            "m": jax.numpy.zeros((512, 256) if fast else (2048, 1024))}
+    n_ckpt, n_bad = (4, 2) if fast else (8, 3)
+    for s in range(1, n_ckpt + 1):
+        mgr.save(s, tree)
+    inj = FaultInjector(0)
+    for s in range(n_ckpt, n_ckpt - n_bad, -1):
+        inj.corrupt_checkpoint(d, step=s, mode="silent")
+    t0 = time.perf_counter()
+    step, _ = mgr.restore_latest_verified(tree)
+    dt = time.perf_counter() - t0
+    assert step == n_ckpt - n_bad
+    return 1e6 * dt, f"walked_back={n_bad};checkpoints={n_ckpt}"
+
+
+def _rollback_cost(fast: bool):
+    import tempfile
+    from repro.launch.train import train_loop
+    cfg = get_config("paper-lm").reduced().with_head(
+        num_negatives=32, refresh_every=1000, proposal="per_token")
+    steps, every, fault_at = (12, 4, 9) if fast else (40, 10, 33)
+    corpus = ZipfLM(vocab_size=cfg.vocab_size, num_clusters=16,
+                    seq_len=33, seed=0).sample(256)
+    executed = []
+    inj = FaultInjector(1, [FaultSpec("nan_loss", step=fault_at)])
+    t0 = time.perf_counter()
+    train_loop(cfg, steps=steps, batch_size=8, seq_len=32, corpus=corpus,
+               lr=1e-3, log_every=10 ** 6, total_steps=steps,
+               ckpt_dir=tempfile.mkdtemp(prefix="bench_rollback_"),
+               ckpt_every=every, injector=inj,
+               guardrails=GuardrailConfig(max_consecutive_bad=1,
+                                          warmup_steps=10 ** 6),
+               on_metrics=lambda s, m: executed.append(s))
+    dt = time.perf_counter() - t0
+    replayed = len(executed) - steps
+    return (1e6 * dt / max(len(executed), 1),
+            f"replayed_steps={replayed};horizon={steps};"
+            f"rollbacks={1 if replayed > 0 else 0}")
+
+
+def _goodput_shedding(fast: bool):
+    nreq, max_queue, slots = (16, 4, 2) if fast else (64, 8, 4)
+    cfg = get_config("paper-lm").reduced().with_serve(
+        max_slots=slots, page_size=4, max_seq=32, max_queue=max_queue)
+    eng = Engine(cfg, init_key=jax.random.PRNGKey(0), head="midx")
+    inj = FaultInjector(0)
+    eng.warmup([4])
+    reqs = inj.flood(nreq, plen=4, max_new=8, vocab=cfg.vocab_size)
+    t0 = time.perf_counter()
+    res = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    ok = [r for r in res.values() if r.status == "ok"]
+    tokens = sum(len(r.tokens) for r in ok)
+    return (1e6 * dt / max(tokens, 1),
+            f"goodput_tok_s={tokens / max(dt, 1e-9):.1f};ok={len(ok)};"
+            f"shed={eng.stats.shed};timeouts={eng.stats.timeouts}")
+
+
+def run(fast: bool = True):
+    us, derived = _restore_fallback(fast)
+    rows = [("resilience/restore_fallback", us, derived)]
+    us, derived = _rollback_cost(fast)
+    rows.append(("resilience/rollback_cost", us, derived))
+    us, derived = _goodput_shedding(fast)
+    rows.append(("resilience/goodput_shedding", us, derived))
+    return rows

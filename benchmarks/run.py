@@ -19,8 +19,9 @@ import traceback
 from benchmarks import (bench_codewords, bench_grad_bias, bench_head_step,
                         bench_index_refresh, bench_kl, bench_learnable,
                         bench_lm_ppl, bench_proposals, bench_recsys,
-                        bench_sample_size, bench_sampling_time, bench_serve,
-                        bench_xmc, roofline)
+                        bench_resilience, bench_sample_size,
+                        bench_sampling_time, bench_serve, bench_xmc,
+                        roofline)
 
 ALL = {
     "sampling_time": bench_sampling_time,   # Fig 6 / Table 1
@@ -36,6 +37,7 @@ ALL = {
     "serve": bench_serve,                   # engine: midx vs full head (§5)
     "index_refresh": bench_index_refresh,   # lifecycle: rebuild paths + KL (§8)
     "proposals": bench_proposals,           # registry bake-off: KL/bias/conv (§10)
+    "resilience": bench_resilience,         # fault recovery costs (§11)
     "roofline": roofline,                   # §Roofline (from dry-run JSONs)
 }
 

@@ -1,2 +1,3 @@
-from repro.checkpoint.manager import (CheckpointManager, save_serving_state,
+from repro.checkpoint.manager import (CheckpointError, CheckpointManager,
+                                      save_serving_state,
                                       restore_serving_state)

@@ -2,30 +2,49 @@
 
 Layout:
   <root>/step_<N>.tmp/...   (being written)
+  <root>/step_<N>.old/...   (previous committed dir, mid-swap only)
   <root>/step_<N>/          (atomic rename on completion)
       arrays.npz            flattened leaves (global / fully-gathered values)
-      tree.json             treedef + leaf dtypes/shapes + user metadata
+      tree.json             treedef + leaf dtypes/shapes/CRC32s + metadata
 
-Fault-tolerance properties:
-  - atomic: a crash mid-save never corrupts the latest checkpoint (tmp dir
-    is renamed only after fsync of all files);
+Fault-tolerance properties (DESIGN §4, hardened in §11):
+  - atomic: a crash mid-save never corrupts the latest checkpoint — every
+    file AND the directory entries are fsynced before the commit rename,
+    and an existing committed dir is renamed aside (never rmtree'd) until
+    the new one has landed; `_recover()` heals the aside dir on restart;
+  - verifiable: tree.json records a CRC32 per leaf plus the treedef string;
+    `verify`/`restore` recompute both, so silent byte corruption is caught
+    instead of loaded into the optimizer;
+  - restore fallback: `latest_verified_step` / `restore_latest_verified`
+    walk back past corrupt or structurally mismatched steps to the newest
+    checkpoint that verifies;
   - keep-k GC never deletes the most recent complete checkpoint;
   - `latest_step()` scans for *complete* dirs only;
   - elastic restore: arrays are saved with global shapes, so `restore` can
     re-shard onto any mesh (pass shardings=...); a job restarted at a
     different scale re-pjits the same values (DESIGN §4).
 Data-pipeline position is stored in metadata → exact skip-ahead resume.
+
+`fault_hook(phase, step)` is the resilience seam: when set (by
+repro.resilience.FaultInjector.attach_checkpoint), save() calls it at the
+phases 'arrays' | 'tree' | 'committed' | 'swap' so chaos tests can kill the
+writer at any point of the commit protocol.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
-from typing import Any, Optional
+import zlib
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint failed verification or structural matching."""
 
 
 def _flatten_with_names(tree):
@@ -33,31 +52,68 @@ def _flatten_with_names(tree):
     return flat, treedef
 
 
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _parse_step(name: str) -> Optional[int]:
+    if not name.startswith("step_") or name.endswith((".tmp", ".old")):
+        return None
+    try:
+        return int(name.split("_")[1])
+    except ValueError:
+        return None
+
+
 class CheckpointManager:
     def __init__(self, root: str, keep: int = 3):
         self.root = root
         self.keep = keep
+        self.fault_hook: Optional[Callable[[str, int], None]] = None
         os.makedirs(root, exist_ok=True)
+        self._recover()
 
     # ------------------------------------------------------------- paths
     def _dir(self, step: int) -> str:
         return os.path.join(self.root, f"step_{step:010d}")
 
-    def latest_step(self) -> Optional[int]:
-        steps = []
+    def _fault(self, phase: str, step: int) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook(phase, step)
+
+    def _recover(self) -> None:
+        """Heal a crash mid-commit: a `.old` dir whose final dir is missing
+        was renamed aside but never replaced — put it back. One whose final
+        dir exists is debris from a crash after commit — drop it."""
         for name in os.listdir(self.root):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                full = os.path.join(self.root, name)
-                if os.path.exists(os.path.join(full, "COMMITTED")):
-                    steps.append(int(name.split("_")[1]))
+            if not name.endswith(".old"):
+                continue
+            aside = os.path.join(self.root, name)
+            final = aside[: -len(".old")]
+            if os.path.exists(final):
+                shutil.rmtree(aside, ignore_errors=True)
+            else:
+                os.rename(aside, final)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
         return max(steps) if steps else None
 
     def all_steps(self) -> list[int]:
         out = []
         for name in sorted(os.listdir(self.root)):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                if os.path.exists(os.path.join(self.root, name, "COMMITTED")):
-                    out.append(int(name.split("_")[1]))
+            step = _parse_step(name)
+            if step is not None and os.path.exists(
+                    os.path.join(self.root, name, "COMMITTED")):
+                out.append(step)
         return out
 
     # ------------------------------------------------------------- save
@@ -69,24 +125,44 @@ class CheckpointManager:
         os.makedirs(tmp)
         leaves, treedef = _flatten_with_names(tree)
         host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
-        np.savez(os.path.join(tmp, "arrays.npz"),
+        arrays_path = os.path.join(tmp, "arrays.npz")
+        np.savez(arrays_path,
                  **{f"leaf_{i}": l for i, l in enumerate(host_leaves)})
+        self._fault("arrays", step)
+        _fsync_path(arrays_path)
         spec = {
             "treedef": str(treedef),
             "num_leaves": len(host_leaves),
             "shapes": [list(l.shape) for l in host_leaves],
             "dtypes": [str(l.dtype) for l in host_leaves],
+            "crc32": [_leaf_crc(l) for l in host_leaves],
             "metadata": metadata or {},
         }
-        with open(os.path.join(tmp, "tree.json"), "w") as f:
+        tree_path = os.path.join(tmp, "tree.json")
+        with open(tree_path, "w") as f:
             json.dump(spec, f)
+            f.flush()
+            os.fsync(f.fileno())
+        self._fault("tree", step)
         with open(os.path.join(tmp, "COMMITTED"), "w") as f:
             f.write("ok")
             f.flush()
             os.fsync(f.fileno())
+        _fsync_path(tmp)               # directory entries of the tmp dir
+        self._fault("committed", step)
+        # commit: never a window without a complete checkpoint on disk —
+        # the old dir is renamed aside (not rmtree'd) until the new one has
+        # landed; _recover() heals either half of the swap after a crash
+        old = final + ".old"
         if os.path.exists(final):
-            shutil.rmtree(final)
+            if os.path.exists(old):
+                shutil.rmtree(old)
+            os.rename(final, old)
+        self._fault("swap", step)
         os.rename(tmp, final)          # atomic commit
+        _fsync_path(self.root)
+        if os.path.exists(old):
+            shutil.rmtree(old)
         self._gc()
         return final
 
@@ -95,21 +171,93 @@ class CheckpointManager:
         for s in steps[: max(0, len(steps) - self.keep)]:
             shutil.rmtree(self._dir(s), ignore_errors=True)
 
+    # ------------------------------------------------------------- verify
+    def _spec(self, step: int) -> dict:
+        with open(os.path.join(self._dir(step), "tree.json")) as f:
+            return json.load(f)
+
+    def verify(self, step: int, like: Any = None) -> list[str]:
+        """Check a committed step without building arrays: tree.json parses,
+        arrays.npz loads, per-leaf CRC32s match (when recorded), and — with
+        `like` — leaf count and treedef string agree. Returns reasons;
+        [] means the checkpoint is restorable."""
+        d = self._dir(step)
+        try:
+            spec = self._spec(step)
+        except Exception as e:                      # noqa: BLE001
+            return [f"{d}: tree.json unreadable ({e!r})"]
+        reasons = []
+        try:
+            with np.load(os.path.join(d, "arrays.npz")) as z:
+                names = [f"leaf_{i}" for i in range(spec["num_leaves"])]
+                if sorted(z.files) != sorted(names):
+                    reasons.append(
+                        f"{d}: arrays.npz holds {len(z.files)} leaves, "
+                        f"tree.json promises {spec['num_leaves']}")
+                else:
+                    crcs = spec.get("crc32")
+                    for i, name in enumerate(names):
+                        leaf = z[name]
+                        if crcs is not None and _leaf_crc(leaf) != crcs[i]:
+                            reasons.append(
+                                f"{d}: CRC32 mismatch on {name} "
+                                "(silent corruption)")
+        except Exception as e:                      # noqa: BLE001
+            reasons.append(f"{d}: arrays.npz unreadable ({e!r})")
+        if like is not None:
+            like_leaves, treedef = _flatten_with_names(like)
+            if spec["num_leaves"] != len(like_leaves):
+                reasons.append(
+                    f"{d}: checkpoint has {spec['num_leaves']} leaves, "
+                    f"restore target has {len(like_leaves)}")
+            if spec.get("treedef") and spec["treedef"] != str(treedef):
+                reasons.append(f"{d}: treedef mismatch with restore target")
+        return reasons
+
+    def latest_verified_step(self, like: Any = None) -> Optional[int]:
+        """Newest step that passes `verify` — the restore-fallback walk:
+        corrupt or mismatched steps are skipped (and reported), older
+        complete checkpoints remain eligible."""
+        for step in reversed(self.all_steps()):
+            reasons = self.verify(step, like)
+            if not reasons:
+                return step
+            print(f"[ckpt] skipping step {step}: {'; '.join(reasons)}")
+        return None
+
     # ------------------------------------------------------------- restore
     def metadata(self, step: int) -> dict:
-        with open(os.path.join(self._dir(step), "tree.json")) as f:
-            return json.load(f)["metadata"]
+        return self._spec(step)["metadata"]
 
-    def restore(self, step: int, like: Any, *, shardings: Any = None) -> Any:
+    def restore(self, step: int, like: Any, *, shardings: Any = None,
+                verify: bool = True) -> Any:
         """Restore into the structure of `like`. If `shardings` (a matching
         pytree of jax.sharding.Sharding) is given, device_put re-shards —
         this is the elastic-restore path (checkpoint saved on mesh A can be
-        loaded onto mesh B)."""
+        loaded onto mesh B). verify=True (default) additionally checks the
+        recorded per-leaf CRC32s and the treedef string before any value is
+        installed."""
         d = self._dir(step)
+        spec = self._spec(step)
+        like_leaves, treedef = _flatten_with_names(like)
+        if spec["num_leaves"] != len(like_leaves):
+            raise CheckpointError(
+                f"{d}: checkpoint holds {spec['num_leaves']} leaves but the "
+                f"restore target has {len(like_leaves)} — model/checkpoint "
+                "mismatch")
+        if verify and spec.get("treedef") and spec["treedef"] != str(treedef):
+            raise CheckpointError(
+                f"{d}: treedef mismatch — the checkpoint was saved from a "
+                "different pytree structure than the restore target")
         with np.load(os.path.join(d, "arrays.npz")) as z:
             leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
-        like_leaves, treedef = _flatten_with_names(like)
-        assert len(leaves) == len(like_leaves), "checkpoint/model mismatch"
+        if verify and spec.get("crc32"):
+            for i, leaf in enumerate(leaves):
+                if _leaf_crc(leaf) != spec["crc32"][i]:
+                    raise CheckpointError(
+                        f"{d}: CRC32 mismatch on leaf_{i} — silent "
+                        "corruption; use restore_latest_verified to walk "
+                        "back to an intact checkpoint")
         cast = [np.asarray(l).astype(ll.dtype) if hasattr(ll, "dtype") else l
                 for l, ll in zip(leaves, like_leaves)]
         if shardings is not None:
@@ -118,6 +266,18 @@ class CheckpointManager:
         else:
             out = [jnp.asarray(l) for l in cast]
         return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest_verified(self, like: Any, *,
+                                shardings: Any = None) -> tuple[int, Any]:
+        """Walk back to the newest checkpoint that verifies and restore it.
+        Returns (step, tree); raises CheckpointError when nothing under the
+        root survives verification."""
+        step = self.latest_verified_step(like)
+        if step is None:
+            raise CheckpointError(
+                f"no verifiable checkpoint under {self.root} "
+                f"(candidates: {self.all_steps()})")
+        return step, self.restore(step, like, shardings=shardings)
 
 
 # ---------------------------------------------------------------------------
@@ -138,11 +298,13 @@ def save_serving_state(root: str, step: int, params: Any, index: Any,
 def restore_serving_state(root: str, like_params: Any, like_index: Any,
                           step: Optional[int] = None):
     """Restore (params, index, metadata). `like_*` only provide tree
-    structure + leaf dtypes, so `jax.eval_shape` results work."""
+    structure + leaf dtypes, so `jax.eval_shape` results work. With
+    step=None the newest checkpoint that passes verification is used
+    (corrupt ones are walked past)."""
     mgr = CheckpointManager(root)
+    like = {"params": like_params, "index": like_index}
     if step is None:
-        step = mgr.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no complete checkpoint under {root}")
-    tree = mgr.restore(step, {"params": like_params, "index": like_index})
+        step, tree = mgr.restore_latest_verified(like)
+    else:
+        tree = mgr.restore(step, like)
     return tree["params"], tree["index"], mgr.metadata(step)

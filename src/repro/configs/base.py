@@ -78,6 +78,7 @@ class ServeConfig:
     page_size: int = 16
     max_seq: int = 256            # logical per-slot capacity (prompt + gen)
     num_pages: int = 0            # 0 -> max_slots * pages_per_slot + 1
+    max_queue: int = 0            # bounded intake queue; 0 -> unbounded
 
     @property
     def pages_per_slot(self) -> int:

@@ -150,9 +150,13 @@ class RefreshEvent:
     swap_step: int            # step at which the new index went live
     seconds: float            # host wall time attributable to the refresh
     metrics: dict             # drift / did_full / distortion (python floats)
+    rejected: bool = False    # validation gate kept the old state
+    reasons: tuple = ()       # why (repro.resilience.validate strings)
 
     @property
     def mode(self) -> str:
+        if self.rejected:
+            return "rejected"
         return "full" if self.metrics.get("did_full", 1.0) >= 0.5 else "reassign"
 
 
@@ -178,7 +182,7 @@ class IndexLifecycle:
     """
 
     def __init__(self, refresh_fn: Callable, *, every: int, base_key: jax.Array,
-                 lag: int = 0, enabled: bool = True):
+                 lag: int = 0, enabled: bool = True, validate: bool = True):
         if lag < 0:
             raise ValueError(f"lag must be >= 0, got {lag}")
         self.refresh_fn = refresh_fn
@@ -186,6 +190,7 @@ class IndexLifecycle:
         self.lag = lag
         self.base_key = base_key
         self.enabled = enabled and bool(every)
+        self.validate = validate
         self.events: list[RefreshEvent] = []
         self._pending: Optional[tuple] = None   # (dispatch_step, ready_at,
                                                 #  index, metrics, t_dispatch)
@@ -194,7 +199,13 @@ class IndexLifecycle:
     def in_flight(self) -> bool:
         return self._pending is not None
 
-    def _complete(self, swap_step: int) -> tuple[MultiIndex, RefreshEvent]:
+    def abort(self) -> None:
+        """Discard any in-flight refresh without swapping it in (rollback:
+        the pending state was built from params that no longer exist)."""
+        self._pending = None
+
+    def _complete(self, swap_step: int,
+                  current: Any = None) -> tuple[MultiIndex, RefreshEvent]:
         step, _ready, index, metrics, t_disp = self._pending
         self._pending = None
         t0 = time.perf_counter()
@@ -204,6 +215,18 @@ class IndexLifecycle:
         # blocked time + dispatch time = host cost attributable to refresh;
         # device time hidden under the lag window is free by construction
         seconds = (time.perf_counter() - t0) + t_disp
+        # validation gate (DESIGN §11): a degenerate rebuild (empty CSR,
+        # zeroed codebooks, NaN leaves) must never become the live proposal
+        # — keep the old state, record the rejection, keep training
+        if self.validate and current is not None:
+            from repro.resilience.validate import validate_state
+            reasons = validate_state(index, like=current)
+            if reasons:
+                ev = RefreshEvent(step, swap_step, seconds,
+                                  {k: float(v) for k, v in metrics.items()},
+                                  rejected=True, reasons=tuple(reasons))
+                self.events.append(ev)
+                return current, ev
         ev = RefreshEvent(step, swap_step, seconds,
                           {k: float(v) for k, v in metrics.items()})
         self.events.append(ev)
@@ -218,7 +241,7 @@ class IndexLifecycle:
             return index, None
         event = None
         if self._pending is not None and step >= self._pending[1]:
-            index, event = self._complete(step)
+            index, event = self._complete(step, index)
         if (step + 1) % self.every == 0 and self._pending is None:
             key = jax.random.fold_in(self.base_key, step)
             t0 = time.perf_counter()
@@ -226,7 +249,7 @@ class IndexLifecycle:
             t_disp = time.perf_counter() - t0
             self._pending = (step, step + self.lag, new_index, metrics, t_disp)
             if self.lag == 0:
-                index, event = self._complete(step)
+                index, event = self._complete(step, index)
         return index, event
 
     def flush(self, step: int,
@@ -236,7 +259,7 @@ class IndexLifecycle:
         that would be lost on restore)."""
         if self._pending is None:
             return index, None
-        return self._complete(step)
+        return self._complete(step, index)
 
     def summary(self) -> dict:
         from repro.utils.metrics import refresh_summary

@@ -29,6 +29,28 @@ def _model_extras(cfg: ModelConfig, batch: dict) -> dict:
     return kw
 
 
+def _apply_fault(loss, batch: dict):
+    """Resilience seam (DESIGN §11): when the batch carries a '_fault_scale'
+    leaf ([B] float32, normally all-ones), the loss is scaled by its mean —
+    multiplying by 1.0 is IEEE-exact, so an armed-but-quiet injector leaves
+    the trajectory bit-identical, while NaN/Inf/spike values poison the loss
+    AND (through the chain rule) every gradient leaf inside the jitted step,
+    exactly where the non-finite guard must catch them. Shaped [B] so the
+    leaf shards like any other batch leaf under shard_map."""
+    if "_fault_scale" in batch:
+        return loss * jnp.mean(batch["_fault_scale"].astype(jnp.float32))
+    return loss
+
+
+def _guard_select(ok, new_tree, old_tree):
+    """Leafwise select: keep the freshly computed tree when `ok` (a scalar
+    bool), otherwise the pre-step tree — the non-finite skip guard. When ok
+    is True the select returns the new leaves bitwise, so guarded and
+    unguarded healthy steps are identical."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(ok, n, o), new_tree, old_tree)
+
+
 def resolve_proposal(cfg: ModelConfig, head_mode: Optional[str] = None):
     """(mode, Proposal-or-None) for a head config, validated early.
 
@@ -94,7 +116,7 @@ def make_loss_fn(cfg: ModelConfig, *, head_mode: Optional[str] = None,
                 h.reshape(-1, h.shape[-1]), class_embeddings(cfg, params))
             loss = loss + aux_p
             metrics.update(am)
-        return loss, metrics
+        return _apply_fault(loss, batch), metrics
 
     loss_fn.proposal = proposal
     return loss_fn
@@ -118,6 +140,12 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
     with `step.returns_state = True`: the codebook leaves take an SGD step
     at cfg.head.learnable_lr on the aux-loss gradient each call. Read the
     attribute BEFORE jit (jit-wrapped callables drop it).
+
+    Both variants carry the non-finite guard (DESIGN §11): when the loss or
+    the gradient global norm is NaN/Inf, params, opt state (and trainable
+    head state) are returned unchanged and metrics['skipped'] is 1 — a
+    poisoned step never reaches the optimizer, and the host-side guardrails
+    read 'skipped' to drive the rollback policy.
     """
     loss_fn = make_loss_fn(cfg, head_mode=head_mode, window=window,
                            fused_head=fused_head, interpret=interpret,
@@ -137,11 +165,16 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
             (loss, metrics), (gp, gt) = jax.value_and_grad(
                 lf, argnums=(0, 1), has_aux=True)(params, trainable)
             gp, gnorm = clip_by_global_norm(gp, clip_norm)
-            params, opt_state = optimizer.update(gp, opt_state, params)
-            trainable = jax.tree_util.tree_map(lambda t, g: t - lr * g,
-                                               trainable, gt)
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+            new_params, new_opt = optimizer.update(gp, opt_state, params)
+            params = _guard_select(ok, new_params, params)
+            opt_state = _guard_select(ok, new_opt, opt_state)
+            new_trainable = jax.tree_util.tree_map(lambda t, g: t - lr * g,
+                                                   trainable, gt)
+            trainable = _guard_select(ok, new_trainable, trainable)
             state = proposal.merge_trainable(trainable, rest)
-            metrics = {**metrics, "loss": loss, "grad_norm": gnorm}
+            metrics = {**metrics, "loss": loss, "grad_norm": gnorm,
+                       "skipped": 1.0 - ok.astype(jnp.float32)}
             return params, opt_state, state, metrics
 
         train_step.returns_state = True
@@ -152,8 +185,12 @@ def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, state, batch, key)
         grads, gnorm = clip_by_global_norm(grads, clip_norm)
-        params, opt_state = optimizer.update(grads, opt_state, params)
-        metrics = {**metrics, "loss": loss, "grad_norm": gnorm}
+        ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        params = _guard_select(ok, new_params, params)
+        opt_state = _guard_select(ok, new_opt, opt_state)
+        metrics = {**metrics, "loss": loss, "grad_norm": gnorm,
+                   "skipped": 1.0 - ok.astype(jnp.float32)}
         return params, opt_state, metrics
 
     train_step.returns_state = False
@@ -222,6 +259,7 @@ def make_sharded_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh, *,
         for a in axes:
             shard = shard * sizes[a] + jax.lax.axis_index(a)
         key = jax.random.fold_in(key, shard)
+        ef_in = ef
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, index, batch, key)
         if grad_transport == "fp32":
@@ -239,8 +277,19 @@ def make_sharded_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh, *,
         metrics = jax.tree_util.tree_map(
             lambda m: jax.lax.pmean(m, ax), metrics)
         grads, gnorm = clip_by_global_norm(grads, clip_norm)
-        params, opt_state = optimizer.update(grads, opt_state, params)
-        return params, opt_state, {**metrics, "grad_norm": gnorm}, ef
+        # non-finite guard (DESIGN §11): grads were all-reduced, so gnorm —
+        # and the pmean'd loss — are identical on every shard, and all
+        # shards take the same branch. The int8 error-feedback carry must
+        # also roll back, or a NaN step would poison every later step
+        # through the quantization residual.
+        ok = jnp.isfinite(metrics["loss"]) & jnp.isfinite(gnorm)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        params = _guard_select(ok, new_params, params)
+        opt_state = _guard_select(ok, new_opt, opt_state)
+        ef = _guard_select(ok, ef, ef_in)
+        return params, opt_state, {
+            **metrics, "grad_norm": gnorm,
+            "skipped": 1.0 - ok.astype(jnp.float32)}, ef
 
     return shard_map(
         body, mesh=mesh,
@@ -308,7 +357,7 @@ def make_vocab_parallel_train_step(cfg: ModelConfig, optimizer: Optimizer,
                                  batch["labels"], key, axis=vocab_axis,
                                  fused=fused_head, interpret=interpret)
         loss = ce + cfg.router_aux_weight * out["aux_loss"]
-        return loss, {"ce": ce, "aux": out["aux_loss"]}
+        return _apply_fault(loss, batch), {"ce": ce, "aux": out["aux_loss"]}
 
     def is_vp(spec) -> bool:
         return any(e == vocab_axis for e in spec)
@@ -340,11 +389,19 @@ def make_vocab_parallel_train_step(cfg: ModelConfig, optimizer: Optimizer,
         scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
         grads = jax.tree_util.tree_map(
             lambda g: (g * scale).astype(g.dtype), grads)
-        params, opt_state = optimizer.update(grads, opt_state, params)
         metrics = {**metrics, "loss": loss}
         metrics = jax.tree_util.tree_map(
             lambda m: jax.lax.pmean(m, dax), metrics)
-        return params, opt_state, {**metrics, "grad_norm": gnorm}
+        # non-finite guard (DESIGN §11): grads were pmean'd over the data
+        # axis and gnorm psum'd over the vocab axis, so loss/gnorm — and
+        # the skip decision — are identical on every shard.
+        ok = jnp.isfinite(metrics["loss"]) & jnp.isfinite(gnorm)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        params = _guard_select(ok, new_params, params)
+        opt_state = _guard_select(ok, new_opt, opt_state)
+        return params, opt_state, {
+            **metrics, "grad_norm": gnorm,
+            "skipped": 1.0 - ok.astype(jnp.float32)}
 
     return shard_map(
         body, mesh=mesh,

@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager, save_serving_state
+from repro.checkpoint import (CheckpointError, CheckpointManager,
+                              save_serving_state)
 from repro.configs import get_config
 from repro.data import ZipfLM, make_lm_stream
 from repro.index import IndexLifecycle
@@ -32,6 +33,7 @@ from repro.launch.mesh import (make_debug_mesh, make_vocab_mesh, mesh_dp_tp,
                                mesh_vp)
 from repro.models import heads, init_params
 from repro.optim import adamw, cosine_schedule
+from repro.resilience import FaultSpec, InjectedFault, TrainGuardrails
 from repro.utils import metrics as metrics_mod
 
 
@@ -75,12 +77,26 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
                refresh_policy: Optional[str] = None,
                refresh_lag: Optional[int] = None,
                on_metrics: Optional[Callable[[int, dict], None]] = None,
-               on_refresh: Optional[Callable[[Any], None]] = None):
+               on_refresh: Optional[Callable[[Any], None]] = None,
+               injector=None, guardrails=None):
     """Single-process training loop (the multi-host launcher shards this).
 
     total_steps: the JOB's schedule horizon — must stay fixed across
     preemption/resume legs so the LR schedule (and therefore the resumed
     trajectory) is bit-identical to an uninterrupted run.
+
+    injector: an optional repro.resilience.FaultInjector. The loop feeds it
+    the step clock and routes its faults through three seams: a [batch]
+    `_fault_scale` leaf multiplied into the loss (always present, 1.0 when
+    quiet — multiplying by 1.0 is IEEE-exact, so a fault-free injector
+    leaves the trajectory bit-identical), the IndexLifecycle refresh_fn
+    wrapper, and the CheckpointManager save-phase hook.
+
+    guardrails: an optional repro.resilience.GuardrailConfig. The host-side
+    TrainGuardrails monitor always runs; a 'rollback' action restores the
+    newest checkpoint that passes verification, rewinds the step counter and
+    replays (DESIGN §11). Replay is bit-exact because batches, step keys and
+    the LR schedule are all pure functions of (seed, step, total_steps).
 
     mesh / grad_transport: with a mesh (or a non-fp32 transport, which forces
     a data-only debug mesh over all local devices) the loop runs
@@ -176,6 +192,8 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
                                        if a != "model")))
     else:
         refresh = jax.jit(steps_mod.make_refresh_step(cfg, head_mode=mode))
+    if injector is not None:
+        refresh = injector.wrap_refresh(refresh)
     lifecycle = IndexLifecycle(
         refresh, every=cfg.head.refresh_every, lag=cfg.head.refresh_lag,
         base_key=k_index,
@@ -183,21 +201,38 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
                                      and proposal.adaptive))
 
     ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if ckpt is not None and injector is not None:
+        injector.attach_checkpoint(ckpt)
     start_step = 0
-    if ckpt is not None and ckpt.latest_step() is not None:
-        s = ckpt.latest_step()
-        params, opt_state, index = ckpt.restore(
-            s, (params, opt_state, index))
-        start_step = ckpt.metadata(s).get("next_step", s)
-        print(f"[train] resumed from step {start_step}")
+    if ckpt is not None:
+        # restore-fallback walk: resume from the newest checkpoint that
+        # passes verification, skipping corrupt/mismatched step dirs
+        s = ckpt.latest_verified_step((params, opt_state, index))
+        if s is not None:
+            params, opt_state, index = ckpt.restore(
+                s, (params, opt_state, index))
+            start_step = ckpt.metadata(s).get("next_step", s)
+            print(f"[train] resumed from step {start_step}")
 
+    guard = TrainGuardrails(guardrails)
     watchdog = StragglerWatchdog()
+    num_micro = max(1, batch_size // max(dp, 1))
     history = []
-    for step in range(start_step, steps):
+    leg_start = start_step
+    step = start_step
+    while step < steps:
+        if injector is not None:
+            injector.note_step(step)
         batch = stream.batch_at(step)                 # skip-ahead-safe
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        # fault seam: always traced so the jitted program — and therefore
+        # the fault-free trajectory — is identical with or without chaos
+        scale = injector.loss_scale(step) if injector is not None else 1.0
+        batch["_fault_scale"] = jnp.full((batch_size,), scale, jnp.float32)
         k_step = jax.random.fold_in(k_loop, step)
         t0 = time.time()
+        if injector is not None:
+            injector.maybe_sleep(step)
         if vp > 1:
             params, opt_state, metrics = train_step(params, opt_state, index,
                                                     batch, k_step)
@@ -211,17 +246,46 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
             params, opt_state, metrics = train_step(params, opt_state, index,
                                                     batch, k_step)
         loss = float(metrics["loss"])                  # sync point
+        skipped = float(metrics.get("skipped", 0.0)) > 0.5
         dt = time.time() - t0
-        if watchdog.observe(dt):
+        slow = watchdog.observe(dt)
+        if slow:
             print(f"[train] straggler warning at step {step}: {dt:.3f}s "
                   f"(ewma {watchdog.ewma:.3f}s) -> "
-                  f"{watchdog.rebalance_plan(1)}")
+                  f"{watchdog.rebalance_plan(num_micro)}")
+        action = guard.observe(step, loss, skipped=skipped)
+        if skipped:
+            print(f"[train] step {step}: non-finite update skipped "
+                  f"(loss {loss}, params/opt state unchanged)")
+        if action == "rollback":
+            if ckpt is None:
+                print(f"[train] guardrails requested rollback at step {step} "
+                      "but no ckpt_dir is set — continuing degraded")
+            else:
+                try:
+                    # the pending refresh was built from params that are
+                    # about to be discarded — never swap it in
+                    lifecycle.abort()
+                    s2, (params, opt_state, index) = \
+                        ckpt.restore_latest_verified((params, opt_state,
+                                                      index))
+                    resume = ckpt.metadata(s2).get("next_step", s2)
+                    print(f"[train] rollback at step {step}: restored "
+                          f"checkpoint {s2}, replaying from step {resume}")
+                    del history[max(0, resume - leg_start):]
+                    step = resume
+                    continue
+                except CheckpointError as e:
+                    print(f"[train] rollback impossible ({e}) — continuing")
         index, ev = lifecycle.step(step, params, index)
         if ev is not None:
             print(f"[train] refresh @{ev.step} (swap @{ev.swap_step}) "
                   f"mode={ev.mode} {ev.seconds:.3f}s "
                   f"reassigned={float(ev.metrics.get('reassigned_frac', 0.0)):.3f} "
                   f"drift={float(ev.metrics.get('codeword_drift', 0.0)):.3f}")
+            if ev.rejected:
+                print(f"[train] refresh @{ev.step} REJECTED: "
+                      f"{'; '.join(ev.reasons)} — keeping live state")
             if on_refresh:
                 on_refresh(ev)
         if step % log_every == 0 or step == steps - 1:
@@ -230,26 +294,40 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
                   f"gnorm {float(metrics['grad_norm']):.3f} ({dt:.3f}s)")
         history.append(loss)
         if on_metrics:
-            on_metrics(step, metrics)
+            on_metrics(step, {**metrics, "guard_action": action,
+                              "straggler": 1.0 if slow else 0.0})
         if ckpt is not None and (step + 1) % ckpt_every == 0:
             # the saved index must never be mid-flight: force-complete any
             # pending refresh so restore resumes from a self-contained state
             index, ev = lifecycle.flush(step, index)
             if ev is not None and on_refresh:
                 on_refresh(ev)
-            ckpt.save(step + 1, (params, opt_state, index),
-                      metadata={"next_step": step + 1})
+            try:
+                ckpt.save(step + 1, (params, opt_state, index),
+                          metadata={"next_step": step + 1})
+            except InjectedFault as e:
+                print(f"[train] checkpoint save at step {step + 1} "
+                      f"killed: {e} — previous checkpoint still intact")
+        step += 1
     index, ev = lifecycle.flush(steps - 1, index)
     if ev is not None and on_refresh:
         on_refresh(ev)
     if lifecycle.events:
         s = metrics_mod.refresh_summary(lifecycle.events)
         print(f"[train] refresh summary: {s['refreshes']} events "
-              f"({s['full_refits']} full / {s['reassign_only']} reassign) "
+              f"({s['full_refits']} full / {s['reassign_only']} reassign / "
+              f"{s.get('rejected', 0)} rejected) "
               f"{s['refresh_s']:.2f}s total")
+    if guard.events:
+        gs = guard.summary()
+        print(f"[train] guardrail summary: {gs['skips']} skips, "
+              f"{gs['spikes']} spikes, {gs['rollbacks']} rollbacks")
     if ckpt is not None:
-        ckpt.save(steps, (params, opt_state, index),
-                  metadata={"next_step": steps})
+        try:
+            ckpt.save(steps, (params, opt_state, index),
+                      metadata={"next_step": steps})
+        except InjectedFault as e:
+            print(f"[train] final checkpoint save killed: {e}")
         # serving export: {"params","index"} only (no opt state) — what
         # `serve.Engine.from_checkpoint` restores (DESIGN §5). The serving
         # stack consumes the replicated index layout, so a vocab-parallel
@@ -304,6 +382,13 @@ def main():
     ap.add_argument("--refresh-lag", type=int, default=None,
                     help="staleness window: swap the rebuilt index in this "
                          "many steps after dispatch (0 = synchronous)")
+    ap.add_argument("--chaos", default=None,
+                    help="fault plan, comma-separated 'kind@step[:mode_or_"
+                         "arg]' specs (DESIGN §11), e.g. 'nan_loss@10,"
+                         "degenerate_refresh@24:empty,slow_step@5:0.2,"
+                         "kill_mid_save@100:committed'")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed of the injector's (seed, step) fault streams")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -319,6 +404,9 @@ def main():
     if args.fused_head == "on" and jax.default_backend() != "tpu":
         raise SystemExit("--fused-head on compiles Pallas kernels and needs "
                          "a TPU backend; use --fused-head interpret here")
+    injector = None
+    if args.chaos:
+        injector = _parse_chaos(args.chaos, args.chaos_seed)
     train_loop(cfg, steps=args.steps, batch_size=args.batch, seq_len=args.seq,
                ckpt_dir=args.ckpt, head_mode=args.head, lr=args.lr,
                mesh=mesh, grad_transport=args.grad_transport,
@@ -326,7 +414,32 @@ def main():
                fused_interpret=args.fused_head == "interpret",
                refresh_every=args.refresh_every,
                refresh_policy=args.refresh_policy,
-               refresh_lag=args.refresh_lag)
+               refresh_lag=args.refresh_lag,
+               injector=injector)
+    if injector is not None:
+        print(f"[train] chaos report: {injector.summary()}")
+
+
+def _parse_chaos(plan: str, seed: int):
+    """'kind@step[:mode_or_arg]' specs -> a FaultInjector. A numeric suffix
+    becomes FaultSpec.arg (spike factor, sleep seconds); anything else
+    becomes FaultSpec.mode (refresh degeneracy, save phase)."""
+    from repro.resilience import FaultInjector
+    specs = []
+    for item in plan.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        kind, _, rest = item.partition("@")
+        step_s, _, extra = rest.partition(":")
+        spec = FaultSpec(kind=kind, step=int(step_s) if step_s else -1)
+        if extra:
+            try:
+                spec = dataclasses.replace(spec, arg=float(extra))
+            except ValueError:
+                spec = dataclasses.replace(spec, mode=extra)
+        specs.append(spec)
+    return FaultInjector(seed, specs)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,30 @@
+"""repro.resilience — deterministic fault injection + recovery guardrails
+(DESIGN §11).
+
+The reproduction's correctness story (estimator quality tracks proposal
+divergence) and the north star's serving story (graceful degradation under
+heavy traffic) both die silently when a component fails without being
+noticed. This subsystem makes failure a first-class, *testable* input:
+
+  faults      seeded FaultInjector — NaN/Inf/spiked losses, slow steps,
+              kill-mid-save, checkpoint byte corruption, degenerate refresh
+              output, serve-side floods and oversized requests; every fault
+              reproducible from (seed, step).
+  guardrails  TrainGuardrails — EWMA spike detection + bounded
+              consecutive-bad-step escalation to checkpoint rollback,
+              layered on the in-step non-finite skip guard.
+  validate    validate_state / validate_index — the gate a new head state
+              must pass before an IndexLifecycle swap or an engine
+              swap_index installs it.
+"""
+from repro.resilience.faults import (FaultInjector, FaultSpec, InjectedFault,
+                                     poison_state)
+from repro.resilience.guardrails import (GuardrailConfig, GuardrailEvent,
+                                         TrainGuardrails)
+from repro.resilience.validate import (validate_index, validate_state)
+
+__all__ = [
+    "FaultInjector", "FaultSpec", "InjectedFault", "poison_state",
+    "GuardrailConfig", "GuardrailEvent", "TrainGuardrails",
+    "validate_index", "validate_state",
+]

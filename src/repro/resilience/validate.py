@@ -1,0 +1,123 @@
+"""Head-state validation: reject degenerate indexes before they go live.
+
+The paper's estimator-quality bound degrades with KL(softmax ‖ proposal); a
+silently broken index (NaN codebooks after a diverged refit, empty clusters
+after a bad refresh, a truncated restore) doesn't crash training — it makes
+every sampled-softmax step quietly biased. These checks run at the two
+places a new head state enters the system (IndexLifecycle swap, engine
+`swap_index`) and return a list of human-readable reasons; an empty list
+means the state is safe to install (DESIGN §11).
+
+Validation is host-side numpy over the candidate state — it runs off the
+hot path, once per refresh/swap, never inside a jitted step.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.index.build import MultiIndex
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x))
+
+
+def validate_index(index: MultiIndex,
+                   expect_classes: Optional[int] = None) -> list[str]:
+    """MultiIndex invariants: finite nonzero codebooks + a CSR layout that
+    partitions exactly the class set. Empty *individual* joint clusters are
+    legal (K² cells usually exceed the occupied ones); a CSR whose counts no
+    longer sum to N, or codebooks that are all-zero/non-finite, are not."""
+    reasons = []
+    cb1, cb2 = _np(index.codebook1), _np(index.codebook2)
+    for name, cb in (("codebook1", cb1), ("codebook2", cb2)):
+        if not np.all(np.isfinite(cb)):
+            reasons.append(f"{name} has non-finite entries")
+        elif float(np.abs(cb).sum()) == 0.0:
+            reasons.append(f"{name} is all-zero")
+    if index.has_residuals and not np.all(np.isfinite(_np(index.residuals))):
+        reasons.append("residuals have non-finite entries")
+    n = index.num_classes
+    if expect_classes is not None and n != expect_classes:
+        reasons.append(f"index covers {n} classes, expected {expect_classes}")
+    counts = _np(index.counts)
+    offsets = _np(index.offsets)
+    sorted_ids = _np(index.sorted_ids)
+    total = int(counts.sum())
+    if total != n:
+        reasons.append(f"cluster counts sum to {total}, expected {n} "
+                       "(degenerate/empty clusters)")
+    if offsets.shape[0] != counts.size + 1:
+        reasons.append(f"offsets length {offsets.shape[0]} != K^2+1 "
+                       f"({counts.size + 1})")
+    else:
+        if int(offsets[0]) != 0 or int(offsets[-1]) != n:
+            reasons.append(f"offsets span [{int(offsets[0])}, "
+                           f"{int(offsets[-1])}], expected [0, {n}]")
+        if np.any(np.diff(offsets) < 0):
+            reasons.append("offsets are not monotone non-decreasing")
+        elif not np.array_equal(np.diff(offsets), counts.reshape(-1)):
+            reasons.append("offsets/counts disagree")
+    if sorted_ids.shape[0] != n or (
+            n and not np.array_equal(np.sort(sorted_ids), np.arange(n))):
+        reasons.append("sorted_ids is not a permutation of the class ids")
+    return reasons
+
+
+def _validate_generic(state: Any) -> list[str]:
+    """Any head-state pytree: float leaves must be NaN-free. -inf is legal
+    (log-probabilities of zero-mass classes), NaN never is."""
+    reasons = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(state):
+        if hasattr(leaf, "dtype") and np.issubdtype(
+                np.asarray(leaf).dtype, np.floating):
+            arr = _np(leaf)
+            if arr.size and np.any(np.isnan(arr)):
+                reasons.append(
+                    f"NaN values in leaf {jax.tree_util.keystr(path)}")
+    return reasons
+
+
+def _validate_like(state: Any, like: Any) -> list[str]:
+    """Structure/shape/dtype agreement with the state being replaced — a
+    swap must never change the pytree the jitted step was traced for."""
+    treedef = jax.tree_util.tree_structure(state)
+    like_def = jax.tree_util.tree_structure(like)
+    if treedef != like_def:
+        return [f"tree structure mismatch: got {treedef}, expected "
+                f"{like_def}"]
+    reasons = []
+    for (path, leaf), ref in zip(jax.tree_util.tree_leaves_with_path(state),
+                                 jax.tree_util.tree_leaves(like)):
+        shape = getattr(leaf, "shape", None)
+        ref_shape = getattr(ref, "shape", None)
+        if shape != ref_shape:
+            reasons.append(f"leaf {jax.tree_util.keystr(path)} shape "
+                           f"{shape} != current {ref_shape}")
+        elif getattr(leaf, "dtype", None) != getattr(ref, "dtype", None):
+            reasons.append(f"leaf {jax.tree_util.keystr(path)} dtype "
+                           f"{getattr(leaf, 'dtype', None)} != current "
+                           f"{getattr(ref, 'dtype', None)}")
+    return reasons
+
+
+def validate_state(state: Any, like: Any = None,
+                   expect_classes: Optional[int] = None) -> list[str]:
+    """Validate any proposal/head state before it goes live.
+
+    `like` (the state being replaced) adds the structural checks; a
+    MultiIndex additionally gets the full CSR/codebook invariants. Returns
+    [] when the state is safe to install."""
+    reasons = []
+    if like is not None:
+        reasons += _validate_like(state, like)
+        if reasons:
+            return reasons          # structure is broken; leaf checks moot
+    if isinstance(state, MultiIndex):
+        reasons += validate_index(state, expect_classes)
+    else:
+        reasons += _validate_generic(state)
+    return reasons

@@ -1,5 +1,5 @@
 """repro.serve — continuous-batching serving engine with a paged KV pool
 around the MIDX decode head (DESIGN §5)."""
 from repro.serve.kv_pool import PagePool, TRASH_PAGE
-from repro.serve.scheduler import Request, Scheduler, SlotState
+from repro.serve.scheduler import Rejection, Request, Scheduler, SlotState
 from repro.serve.engine import Engine, EngineStats, RequestResult

@@ -42,15 +42,17 @@ from repro.models import (heads, init_paged_state, init_params, logits_full,
                           paged_decode_step, prefill, reset_slot,
                           write_prefill)
 from repro.serve.kv_pool import PagePool
-from repro.serve.scheduler import Request, Scheduler, SlotState
+from repro.serve.scheduler import Rejection, Request, Scheduler, SlotState
 from repro.utils import metrics as metrics_mod
 
 
 @dataclasses.dataclass
 class RequestResult:
     rid: int
-    tokens: np.ndarray              # generated ids [max_new]
+    tokens: np.ndarray              # generated ids (may be partial)
     latencies_s: list               # per-token wall latency
+    status: str = "ok"              # 'ok' | 'shed' | 'timeout'
+    reason: str = ""                # rejection reason when status != 'ok'
 
 
 @dataclasses.dataclass
@@ -59,14 +61,29 @@ class EngineStats:
     wall_s: float = 0.0
     waves: int = 0
     steps: int = 0
+    shed: int = 0                   # structured admission rejections
+    timeouts: int = 0               # deadline retirements (partial results)
+    swap_rejected: int = 0          # degenerate indexes refused by the gate
+    swaps: int = 0                  # successful index installs
     latencies_s: list = dataclasses.field(default_factory=list)
+
+    def counters(self) -> dict:
+        return {"shed": self.shed, "timeouts": self.timeouts,
+                "swap_rejected": self.swap_rejected, "swaps": self.swaps}
+
+    def health(self) -> dict:
+        """Degradation report (DESIGN §11): ok=True means no request was
+        shed or timed out and no swap was refused since the last reset."""
+        c = self.counters()
+        return {"ok": not (self.shed or self.timeouts or self.swap_rejected),
+                **c}
 
     def summary(self) -> dict:
         out = {"generated": self.generated, "wall_s": round(self.wall_s, 3),
                "waves": self.waves, "steps": self.steps,
                "tok_s": round(self.generated / max(self.wall_s, 1e-9), 1)}
-        out.update({k: round(v, 3) for k, v in
-                    metrics_mod.latency_summary(self.latencies_s).items()})
+        out.update({k: round(v, 3) for k, v in metrics_mod.latency_summary(
+            self.latencies_s, counters=self.counters()).items()})
         return out
 
 
@@ -123,7 +140,8 @@ class Engine:
         self._pending_swap = None     # (at_decode_step, index) | None
         self.pool = PagePool(sv.resolved_num_pages, sv.page_size,
                              sv.pages_per_slot, sv.max_slots)
-        self.sched = Scheduler(sv.max_slots, self.pool)
+        self.sched = Scheduler(sv.max_slots, self.pool,
+                               max_queue=getattr(sv, "max_queue", 0) or None)
         self.state = init_paged_state(cfg, sv.max_slots, sv.resolved_num_pages,
                                       sv.page_size, sv.pages_per_slot,
                                       window=window)
@@ -185,7 +203,7 @@ class Engine:
                                             "head": self.head})
 
     # ------------------------------------------------------------ index swap
-    def swap_index(self, index) -> None:
+    def swap_index(self, index, validate: bool = True) -> bool:
         """Atomically install a freshly built index (DESIGN §8).
 
         The index is only read between decode steps (the jitted step takes
@@ -193,10 +211,24 @@ class Engine:
         slots: their KV pages, positions and PRNG streams are untouched, and
         the very next step samples through the new proposal. Swapping an
         index rebuilt from unchanged params is token-identity-preserving —
-        what the serve CLI's --verify machinery checks across --swap-step."""
+        what the serve CLI's --verify machinery checks across --swap-step.
+
+        Validation gate (DESIGN §11): a degenerate candidate (NaN codebooks,
+        empty CSR, wrong tree structure) is refused — the live index stays,
+        stats.swap_rejected increments, and False comes back. Decode then
+        proceeds token-identical to never having attempted the swap."""
+        if validate:
+            from repro.resilience.validate import validate_state
+            reasons = validate_state(index, like=self.index)
+            if reasons:
+                self.stats.swap_rejected += 1
+                print(f"[engine] swap_index rejected: {'; '.join(reasons)}")
+                return False
         self.index = index
+        self.stats.swaps += 1
         if getattr(self, "_solo", None) is not None:
             self._solo.index = index
+        return True
 
     def schedule_swap(self, index, at_step: int) -> None:
         """Install `index` just before decode step `at_step` (counted by
@@ -305,15 +337,30 @@ class Engine:
     # ------------------------------------------------------------ main loop
     def run(self, requests: list[Request]) -> dict[int, RequestResult]:
         """Drive all requests to completion; open-loop arrivals honored
-        against wall-clock time since `run` started."""
-        for r in requests:
-            self.sched.submit(r)
+        against wall-clock time since `run` started. Shed and timed-out
+        requests come back in the same result dict with status 'shed' /
+        'timeout' (partial tokens) instead of raising (DESIGN §11)."""
         results: dict[int, RequestResult] = {}
+        for r in requests:
+            rej = self.sched.submit(r)
+            if rej is not None:
+                self.stats.shed += 1
+                results[r.rid] = RequestResult(
+                    r.rid, np.zeros(0, np.int32), [],
+                    status="shed", reason=f"{rej.reason}: {rej.detail}")
         t_start = time.perf_counter()
         waves0 = self.sched.waves
         sv = self.cfg.serve
         while not self.sched.done:
             now = time.perf_counter() - t_start
+            # deadline enforcement: shed never-admitted expired requests,
+            # retire active over-deadline slots with their partial output
+            for req in self.sched.drop_expired(now):
+                self.stats.timeouts += 1
+                results[req.rid] = RequestResult(
+                    req.rid, np.zeros(0, np.int32), [],
+                    status="timeout", reason="expired before admission")
+            self._expire(now, results)
             admitted = self.sched.admit(now)
             if admitted:
                 self._prefill_wave(admitted)
@@ -360,6 +407,26 @@ class Engine:
                 self.state["page_table"] = jnp.asarray(self.pool.table)
             results[ss.request.rid] = RequestResult(
                 ss.request.rid, np.asarray(ss.out, np.int32), ss.latencies)
+
+    def _expire(self, now: float, results: dict[int, RequestResult]) -> None:
+        """Retire active slots whose deadline passed: the tokens generated so
+        far come back as a partial 'timeout' result, the slot and its KV
+        pages are recycled for the queue (DESIGN §11)."""
+        expired = [s for s, ss in self.sched.active.items()
+                   if ss.request.deadline is not None
+                   and now > ss.request.deadline]
+        for slot in expired:
+            ss = self.sched.finish(slot)
+            self.state = reset_slot(self.state, slot)
+            if "page_table" in self.state:
+                self.state["page_table"] = jnp.asarray(self.pool.table)
+            self.stats.timeouts += 1
+            results[ss.request.rid] = RequestResult(
+                ss.request.rid, np.asarray(ss.out, np.int32), ss.latencies,
+                status="timeout",
+                reason=f"deadline {ss.request.deadline:.3f}s exceeded at "
+                       f"{now:.3f}s with {len(ss.out)}/{ss.request.max_new} "
+                       "tokens")
 
     # ------------------------------------------------------------ verification
     def replay_single(self, req: Request) -> np.ndarray:

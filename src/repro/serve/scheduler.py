@@ -5,6 +5,14 @@ availability in the shared `kv_pool.PagePool`. Admission is strict FIFO (no
 overtaking: a large request at the queue head blocks smaller ones behind it,
 so no request can starve). Finished slots are recycled mid-flight — the
 engine calls `admit` again after every decode step that frees a slot.
+
+Resilience (DESIGN §11): `submit` never raises on bad traffic — a request
+that can never fit a slot/pool, or that arrives when the bounded queue is
+full, comes back as a structured `Rejection` the engine reports instead of
+crashing admission. Requests carry an optional `deadline` (seconds on the
+same clock as `arrival`); `drop_expired` sheds queued requests whose
+deadline passed before they were ever admitted, and the engine retires
+active over-deadline slots with partial results.
 """
 from __future__ import annotations
 
@@ -27,8 +35,20 @@ class Request:
     max_new: int                    # tokens to generate (incl. first)
     seed: int = 0
     arrival: float = 0.0            # open-loop arrival time (s since start)
+    deadline: Optional[float] = None  # same clock as arrival; None = never
     image_emb: Optional[np.ndarray] = None   # vlm: [num_image_tokens, D]
     frames: Optional[np.ndarray] = None      # audio: [encoder_seq, D]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """A request the scheduler refused to take (DESIGN §11).
+
+    reason  'oversized_slot' | 'oversized_pool' | 'queue_full' | 'expired'
+    """
+    rid: int
+    reason: str
+    detail: str = ""
 
 
 @dataclasses.dataclass
@@ -49,33 +69,57 @@ class SlotState:
 class Scheduler:
     """FIFO continuous batching over a fixed slot set + page pool."""
 
-    def __init__(self, num_slots: int, pool: PagePool):
+    def __init__(self, num_slots: int, pool: PagePool,
+                 max_queue: Optional[int] = None):
         self.num_slots = num_slots
         self.pool = pool
+        self.max_queue = max_queue  # None = unbounded intake
         self.queue: collections.deque[Request] = collections.deque()
         self.active: dict[int, SlotState] = {}
         self._free_slots = sorted(range(num_slots), reverse=True)
         self.waves = 0              # admission waves (nonempty admits)
 
     # ------------------------------------------------------------- intake
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> Optional[Rejection]:
+        """Queue `req`, or return a structured Rejection (never raises on
+        bad traffic — a flood or a malformed giant request must degrade the
+        service, not crash it). A config error still raises."""
         if req.max_new < 1:
             raise ValueError(f"request {req.rid}: max_new must be >= 1 "
                              "(prefill always samples the first token)")
         need = len(req.tokens) + req.max_new
         if not self.pool.fits(need):
-            raise ValueError(
-                f"request {req.rid}: {need} tokens exceeds per-slot capacity "
+            return Rejection(
+                req.rid, "oversized_slot",
+                f"{need} tokens exceeds per-slot capacity "
                 f"{self.pool.pages_per_slot * self.pool.page_size}")
         # must also fit the *total* pool (minus the trash page), or the
         # request could never be admitted even with every slot idle and the
         # engine loop would spin forever waiting for pages
         usable = self.pool.num_pages - 1
         if self.pool.pages_needed(need) > usable:
-            raise ValueError(
-                f"request {req.rid}: needs {self.pool.pages_needed(need)} "
-                f"pages but the pool only has {usable} usable pages")
+            return Rejection(
+                req.rid, "oversized_pool",
+                f"needs {self.pool.pages_needed(need)} pages but the pool "
+                f"only has {usable} usable pages")
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            return Rejection(
+                req.rid, "queue_full",
+                f"bounded queue at capacity {self.max_queue}")
         self.queue.append(req)
+        return None
+
+    def drop_expired(self, now: float) -> list[Request]:
+        """Shed queued requests whose deadline already passed — they would
+        waste prefill work only to be retired immediately."""
+        keep, dropped = collections.deque(), []
+        for req in self.queue:
+            if req.deadline is not None and now > req.deadline:
+                dropped.append(req)
+            else:
+                keep.append(req)
+        self.queue = keep
+        return dropped
 
     def next_arrival(self) -> Optional[float]:
         """Arrival time of the queue head — the FIFO admission gate `admit`

@@ -42,10 +42,18 @@ def percentiles(xs, qs=(50, 95, 99)) -> dict[int, float]:
     return {int(q): float(np.percentile(arr, q)) for q in qs}
 
 
-def latency_summary(latencies_s, qs=(50, 95, 99)) -> dict[str, float]:
-    """Serving-style per-token latency summary in milliseconds (DESIGN §5)."""
+def latency_summary(latencies_s, qs=(50, 95, 99),
+                    counters: dict | None = None) -> dict[str, float]:
+    """Serving-style per-token latency summary in milliseconds (DESIGN §5).
+
+    `counters` (DESIGN §11) merges resilience tallies — shed / timeouts /
+    swap_rejected / swaps — into the same report, so a chaos run's goodput
+    and its degradation events come out of one structure."""
     pct = percentiles(np.asarray(latencies_s, np.float64) * 1e3, qs)
-    return {f"p{q}_ms": v for q, v in pct.items()}
+    out = {f"p{q}_ms": v for q, v in pct.items()}
+    if counters:
+        out.update({k: float(v) for k, v in counters.items()})
+    return out
 
 
 def refresh_summary(events) -> dict[str, float]:
@@ -53,22 +61,40 @@ def refresh_summary(events) -> dict[str, float]:
 
     `events` is a sequence of repro.index.RefreshEvent (or anything with
     .seconds / .mode / .metrics). Reports the total host seconds spent on
-    refreshes, the full-refit vs reassign-only split, and mean drift — the
-    numbers the refresh-policy comparison is judged on."""
+    refreshes, the full-refit vs reassign-only vs validation-rejected split,
+    and mean drift — the numbers the refresh-policy comparison is judged
+    on."""
     events = list(events)
     n = len(events)
     if n == 0:
         return {"refreshes": 0, "refresh_s": 0.0, "full_refits": 0,
-                "reassign_only": 0, "mean_reassigned_frac": float("nan"),
+                "reassign_only": 0, "rejected": 0,
+                "mean_reassigned_frac": float("nan"),
                 "mean_codeword_drift": float("nan")}
     full = sum(1 for e in events if e.mode == "full")
+    rejected = sum(1 for e in events if getattr(e, "rejected", False))
     return {
         "refreshes": n,
         "refresh_s": float(sum(e.seconds for e in events)),
         "full_refits": full,
-        "reassign_only": n - full,
+        "reassign_only": n - full - rejected,
+        "rejected": rejected,
         "mean_reassigned_frac": float(np.mean(
             [e.metrics.get("reassigned_frac", np.nan) for e in events])),
         "mean_codeword_drift": float(np.mean(
             [e.metrics.get("codeword_drift", np.nan) for e in events])),
+    }
+
+
+def guardrail_summary(events) -> dict[str, float]:
+    """Aggregate TrainGuardrails events (DESIGN §11): how many updates were
+    skipped by the non-finite guard, how many finite losses tripped the EWMA
+    spike detector, and how many streaks escalated to a rollback."""
+    events = list(events)
+    kinds = [e.kind for e in events]
+    return {
+        "guard_events": len(events),
+        "skips": kinds.count("skip"),
+        "spikes": kinds.count("spike"),
+        "rollbacks": kinds.count("rollback"),
     }

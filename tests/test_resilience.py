@@ -1,0 +1,468 @@
+"""Chaos suite (DESIGN §11): every injected fault must be recovered from,
+and no injected fault may take down the process.
+
+Covers the full fault surface of repro.resilience:
+  checkpoint   kill-mid-save at every commit phase leaves latest_step() at
+               the previous complete checkpoint; a killed same-step re-save
+               is healed from the aside dir; bitflip corruption triggers
+               the checksum walk-back; silent corruption is caught by the
+               per-leaf CRC32; structural mismatch raises an informative
+               CheckpointError.
+  train        a NaN loss poisons every gradient; the in-step guard skips
+               the update bitwise; guardrails escalate a bad streak to a
+               checkpoint rollback whose replayed trajectory is bit-exact
+               against the uninterrupted run at the same total_steps.
+  index        degenerate refresh output (NaN/zero codebooks, empty CSR)
+               is rejected by the lifecycle validation gate — the old
+               index stays live.
+  serve        deadline expiry retires the slot with partial results and
+               frees its pages; a bounded queue sheds floods with
+               structured rejections; oversized requests are shed, not
+               raised; a degenerate swap_index is refused and decode stays
+               token-identical to never attempting it.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointError, CheckpointManager
+from repro.configs import get_config
+from repro.data import ZipfLM, make_lm_stream
+from repro.index import IndexLifecycle, build
+from repro.launch.train import train_loop
+from repro.resilience import (FaultInjector, FaultSpec, GuardrailConfig,
+                              InjectedFault, TrainGuardrails, poison_state,
+                              validate_index, validate_state)
+from repro.serve import Engine, Request, TRASH_PAGE
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("paper-lm").reduced().with_head(
+        num_negatives=32, refresh_every=50, proposal="per_token")
+
+
+@pytest.fixture(scope="module")
+def corpus(tiny_cfg):
+    gen = ZipfLM(vocab_size=tiny_cfg.vocab_size, num_clusters=16,
+                 seq_len=33, seed=0)
+    return gen.sample(256)
+
+
+def _tree(val: float):
+    return {"w": jnp.full((4, 3), val, jnp.float32),
+            "b": jnp.arange(5, dtype=jnp.int32)}
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: kill-mid-save, corruption, walk-back
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("phase", ["arrays", "tree", "committed"])
+def test_kill_mid_save_keeps_previous_checkpoint(tmp_path, phase):
+    """A crash at any pre-commit phase must leave latest_step() pointing at
+    the previous complete checkpoint, and the next save must succeed."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1.0))
+    inj = FaultInjector(0, [FaultSpec("kill_mid_save", step=2, mode=phase)])
+    inj.attach_checkpoint(mgr)
+    with pytest.raises(InjectedFault):
+        mgr.save(2, _tree(2.0))
+    assert mgr.latest_step() == 1
+    # a fresh manager over the same root (the restarted process) agrees
+    assert CheckpointManager(str(tmp_path)).latest_step() == 1
+    _leaves_equal(mgr.restore(1, _tree(0.0)), _tree(1.0))
+    # the one-shot spec is spent: the retried save commits
+    mgr.save(2, _tree(2.0))
+    assert mgr.latest_step() == 2
+    assert inj.fired == [("kill_mid_save", 2)]
+
+
+def test_kill_mid_swap_heals_aside_dir(tmp_path):
+    """Re-saving an existing step renames the old dir aside before the
+    commit rename; a crash between the two renames must be healed on
+    restart — never a window where the checkpoint is simply gone."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1.0))
+    inj = FaultInjector(0, [FaultSpec("kill_mid_save", step=1, mode="swap")])
+    inj.attach_checkpoint(mgr)
+    with pytest.raises(InjectedFault):
+        mgr.save(1, _tree(9.0))
+    # crashed process: final dir is mid-swap; a restart heals the aside dir
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert mgr2.latest_step() == 1
+    _leaves_equal(mgr2.restore(1, _tree(0.0)), _tree(1.0))
+
+
+def test_corrupt_bitflip_triggers_walkback(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1.0))
+    mgr.save(2, _tree(2.0))
+    inj = FaultInjector(3)
+    assert inj.corrupt_checkpoint(str(tmp_path), mode="bitflip") == 2
+    like = _tree(0.0)
+    assert mgr.verify(2, like)               # corrupt: nonempty reasons
+    assert mgr.latest_verified_step(like) == 1
+    step, tree = mgr.restore_latest_verified(like)
+    assert step == 1
+    _leaves_equal(tree, _tree(1.0))
+
+
+def test_corrupt_silent_caught_by_leaf_crc(tmp_path):
+    """'silent' corruption re-writes a leaf consistently with the zip
+    container, so only the per-leaf CRC32 in tree.json can catch it."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1.0))
+    FaultInjector(5).corrupt_checkpoint(str(tmp_path), mode="silent")
+    reasons = mgr.verify(1)
+    assert reasons and any("CRC32" in r for r in reasons)
+    with pytest.raises(CheckpointError, match="CRC32"):
+        mgr.restore(1, _tree(0.0))
+    # verify=False is the explicit escape hatch: loads without checking
+    mgr.restore(1, _tree(0.0), verify=False)
+
+
+def test_corruption_is_deterministic(tmp_path):
+    """Same (seed, step) -> bit-identical damage: chaos runs replay."""
+    damaged = []
+    for leg in ("a", "b"):
+        root = str(tmp_path / leg)
+        CheckpointManager(root).save(3, _tree(1.0))
+        FaultInjector(11).corrupt_checkpoint(root, mode="bitflip")
+        with open(f"{root}/step_{3:010d}/arrays.npz", "rb") as f:
+            damaged.append(f.read())
+    assert damaged[0] == damaged[1]
+
+
+def test_restore_mismatch_error_is_informative(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1.0))                  # 2 leaves
+    like = {"w": jnp.zeros((4, 3)), "b": jnp.zeros(5, jnp.int32),
+            "extra": jnp.zeros(2)}           # 3 leaves
+    with pytest.raises(CheckpointError) as ei:
+        mgr.restore(1, like)
+    msg = str(ei.value)
+    assert "2 leaves" in msg and "3" in msg and "step_" in msg
+
+
+# ---------------------------------------------------------------------------
+# train: non-finite skip guard + guardrails + bit-exact rollback
+# ---------------------------------------------------------------------------
+
+def test_nan_step_skipped_params_unchanged(tiny_cfg, corpus):
+    """A NaN loss (which NaN-poisons every gradient through the chain rule)
+    must leave params AND optimizer state bitwise unchanged, with
+    metrics['skipped'] raised; a healthy step must update."""
+    from repro.launch import steps as steps_mod
+    from repro.models import heads, init_params
+    from repro.optim import adamw
+    cfg = tiny_cfg
+    opt = adamw(1e-3)
+    step_fn = jax.jit(steps_mod.make_train_step(cfg, opt))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt_state = opt.init(params)
+    index = heads.init_head_state(cfg, params, jax.random.fold_in(key, 1))
+    batch = {k: jnp.asarray(v) for k, v in
+             make_lm_stream(corpus, 4, seed=0).batch_at(0).items()}
+    B = batch["tokens"].shape[0]
+
+    poisoned = {**batch, "_fault_scale": jnp.full((B,), jnp.nan, jnp.float32)}
+    p1, o1, m1 = step_fn(params, opt_state, index, poisoned,
+                         jax.random.fold_in(key, 2))
+    assert float(m1["skipped"]) == 1.0
+    assert not np.isfinite(float(m1["loss"]))
+    _leaves_equal(p1, params)
+    _leaves_equal(o1, opt_state)
+
+    healthy = {**batch, "_fault_scale": jnp.ones((B,), jnp.float32)}
+    p2, _, m2 = step_fn(params, opt_state, index, healthy,
+                        jax.random.fold_in(key, 2))
+    assert float(m2["skipped"]) == 0.0
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree_util.tree_leaves(p2),
+                               jax.tree_util.tree_leaves(params)))
+
+
+def test_guardrails_spike_and_rollback_budget():
+    g = TrainGuardrails(GuardrailConfig(warmup_steps=2, spike_factor=3.0,
+                                        max_consecutive_bad=2,
+                                        max_rollbacks=1))
+    for s in range(4):
+        assert g.observe(s, 1.0) == "ok"
+    assert g.observe(4, 10.0) == "bad"            # spike, streak 1
+    assert g.observe(5, 10.0) == "rollback"       # streak hits the bound
+    assert g.rollbacks == 1
+    assert g.observe(6, float("nan")) == "bad"    # fresh streak after reset
+    with pytest.raises(RuntimeError, match="rollbacks exceed"):
+        g.observe(7, float("inf"))                # budget exhausted
+    s = g.summary()
+    assert s["spikes"] == 2 and s["skips"] == 2 and s["rollbacks"] == 2
+
+
+def test_rollback_replay_is_bit_exact(tiny_cfg, corpus, tmp_path):
+    """NaN at step 9 -> skip -> guardrail rollback to the step-8 checkpoint
+    -> replay. The one-shot fault replays clean, so the final params must be
+    bit-identical to an uninterrupted run at the same total_steps horizon."""
+    kw = dict(batch_size=8, seq_len=32, corpus=corpus, lr=1e-3,
+              log_every=1000, total_steps=12)
+    p_clean, _, _, h_clean = train_loop(tiny_cfg, steps=12, **kw)
+
+    inj = FaultInjector(1, [FaultSpec("nan_loss", step=9)])
+    p_chaos, _, _, h_chaos = train_loop(
+        tiny_cfg, steps=12, ckpt_dir=str(tmp_path / "ck"), ckpt_every=4,
+        injector=inj,
+        guardrails=GuardrailConfig(max_consecutive_bad=1, warmup_steps=10 ** 6),
+        **kw)
+    assert inj.fired == [("nan_loss", 9)]
+    for a, b in zip(jax.tree_util.tree_leaves(p_clean),
+                    jax.tree_util.tree_leaves(p_chaos)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the replayed history matches the clean one step for step
+    assert len(h_chaos) == len(h_clean)
+    np.testing.assert_allclose(h_chaos, h_clean, rtol=0, atol=0)
+
+
+def test_quiet_injector_leaves_trajectory_bit_identical(tiny_cfg, corpus):
+    """An injector with an empty plan must not perturb anything: the
+    _fault_scale seam multiplies by exactly 1.0 (IEEE no-op)."""
+    kw = dict(batch_size=8, seq_len=32, corpus=corpus, lr=1e-3,
+              log_every=1000, total_steps=6)
+    p0, _, _, h0 = train_loop(tiny_cfg, steps=6, **kw)
+    p1, _, _, h1 = train_loop(tiny_cfg, steps=6, injector=FaultInjector(0),
+                              **kw)
+    assert h0 == h1
+    for a, b in zip(jax.tree_util.tree_leaves(p0),
+                    jax.tree_util.tree_leaves(p1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# index: degenerate refresh rejected by the validation gate
+# ---------------------------------------------------------------------------
+
+N, D, K = 300, 16, 4
+
+
+@pytest.fixture(scope="module")
+def idx():
+    emb = jax.random.normal(jax.random.PRNGKey(0), (N, D)) * 0.5
+    return build(jax.random.PRNGKey(1), emb, kind="rq", k=K, iters=3,
+                 keep_residuals=False)
+
+
+@pytest.mark.parametrize("mode", ["nan", "zero", "empty"])
+def test_validate_index_catches_degeneracy(idx, mode):
+    assert validate_index(idx) == []
+    assert validate_state(idx, like=idx) == []
+    bad = poison_state(idx, mode)
+    reasons = validate_state(bad, like=idx)
+    assert reasons, mode
+
+
+def test_validate_state_catches_structure_mismatch(idx):
+    reasons = validate_state({"a": jnp.zeros(3)}, like=idx)
+    assert reasons and "structure" in reasons[0]
+
+
+def test_lifecycle_rejects_degenerate_refresh(idx):
+    """A refresh that returns a poisoned index must not go live: the old
+    index stays, the event records the rejection and its reasons."""
+    inj = FaultInjector(0, [FaultSpec("degenerate_refresh", step=3,
+                                      mode="empty")])
+
+    def good_refresh(params, index, key):
+        return index, {"did_full": jnp.float32(0.0)}
+
+    lc = IndexLifecycle(inj.wrap_refresh(good_refresh), every=2, lag=0,
+                        base_key=jax.random.PRNGKey(0))
+    cur = idx
+    events = []
+    for step in range(6):
+        inj.note_step(step)
+        cur, ev = lc.step(step, None, cur)
+        if ev is not None:
+            events.append(ev)
+    rejected = [e for e in events if e.rejected]
+    assert len(rejected) == 1 and rejected[0].step == 3
+    assert rejected[0].mode == "rejected" and rejected[0].reasons
+    # the live index is still the original, bit for bit
+    _leaves_equal(cur, idx)
+    assert lc.summary()["rejected"] == 1
+    # clean cadence points still swapped
+    assert sum(1 for e in events if not e.rejected) == 2
+
+
+def test_lifecycle_abort_discards_pending(idx):
+    lc = IndexLifecycle(lambda p, i, k: (poison_state(i, "nan"), {}),
+                        every=2, lag=3, base_key=jax.random.PRNGKey(0))
+    cur, ev = lc.step(1, None, idx)         # dispatch, in flight
+    assert lc.in_flight and ev is None
+    lc.abort()                               # rollback path: drop it
+    assert not lc.in_flight
+    cur, ev = lc.step(2, None, cur)
+    assert ev is None                        # nothing left to swap
+    _leaves_equal(cur, idx)
+
+
+# ---------------------------------------------------------------------------
+# serve: deadlines, shedding, degenerate swap
+# ---------------------------------------------------------------------------
+
+def _serve_cfg():
+    return get_config("paper-lm").reduced().with_serve(
+        max_slots=2, page_size=4, max_seq=32)
+
+
+def _reqs(cfg, num, plen, max_new, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=plen).astype(np.int32),
+                    max_new=max_new, seed=seed, **kw)
+            for i in range(num)]
+
+
+def test_deadline_retires_slot_with_partial_result():
+    """An over-deadline active request comes back as a partial 'timeout'
+    result; its slot and KV pages are recycled and the engine drains."""
+    cfg = _serve_cfg()
+    eng = Engine(cfg, init_key=jax.random.PRNGKey(0), head="midx")
+    # the first decode-step compile alone far exceeds this deadline, so the
+    # request is deterministically retired mid-generation
+    (req,) = _reqs(cfg, 1, 6, max_new=25, deadline=0.05)
+    res = eng.run([req])[req.rid]
+    assert res.status == "timeout" and "deadline" in res.reason
+    assert 1 <= len(res.tokens) < req.max_new      # partial, prefill done
+    assert eng.sched.done and not eng.sched.active
+    assert np.all(eng.pool.table == TRASH_PAGE)    # pages freed
+    assert eng.stats.timeouts == 1
+    assert eng.stats.health()["ok"] is False
+
+
+def test_expired_before_admission_is_shed():
+    cfg = _serve_cfg()
+    eng = Engine(cfg, init_key=jax.random.PRNGKey(0), head="midx")
+    good = _reqs(cfg, 1, 6, max_new=2)[0]
+    late = dataclasses.replace(_reqs(cfg, 1, 6, max_new=2, seed=1)[0],
+                               rid=7, arrival=50.0, deadline=0.0)
+    res = eng.run([good, late])
+    assert res[7].status == "timeout" and len(res[7].tokens) == 0
+    assert res[good.rid].status == "ok"
+    assert len(res[good.rid].tokens) == 2
+
+
+def test_flood_bounded_queue_sheds_structured():
+    """A flood against a bounded queue degrades to structured shed results —
+    admission never raises, in-capacity requests complete normally."""
+    cfg = get_config("paper-lm").reduced().with_serve(
+        max_slots=1, page_size=4, max_seq=32, max_queue=2)
+    eng = Engine(cfg, init_key=jax.random.PRNGKey(0), head="midx")
+    inj = FaultInjector(0)
+    reqs = inj.flood(6, plen=4, max_new=2, vocab=cfg.vocab_size)
+    res = eng.run(reqs)
+    assert len(res) == 6
+    shed = [r for r in res.values() if r.status == "shed"]
+    ok = [r for r in res.values() if r.status == "ok"]
+    assert len(shed) == 4 and len(ok) == 2
+    assert all(r.reason.startswith("queue_full") for r in shed)
+    assert all(len(r.tokens) == 2 for r in ok)
+    assert eng.stats.shed == 4
+    # deterministic traffic: the same (seed, step) flood replays identically
+    again = FaultInjector(0).flood(6, plen=4, max_new=2,
+                                   vocab=cfg.vocab_size)
+    for a, b in zip(reqs, again):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_oversized_request_shed_not_raised():
+    cfg = _serve_cfg()
+    eng = Engine(cfg, init_key=jax.random.PRNGKey(0), head="midx")
+    inj = FaultInjector(0)
+    big = inj.oversized_request(factor=4, slot_capacity=cfg.serve.max_seq)
+    res = eng.run([big])
+    assert res[big.rid].status == "shed"
+    assert res[big.rid].reason.startswith("oversized_slot")
+    assert eng.stats.health()["shed"] == 1
+
+
+def test_degenerate_swap_rejected_decode_token_identical():
+    """A degenerate index offered mid-stream must be refused by swap_index's
+    validation gate, and the decode must be token-identical to never having
+    attempted the swap (the --verify contract under chaos)."""
+    cfg = _serve_cfg()
+    key = jax.random.PRNGKey(5)
+    base = Engine(cfg, init_key=key, head="midx")
+    plain = base.run(_reqs(cfg, 3, 6, 10))
+
+    chaos = Engine(cfg, init_key=key, head="midx")
+    bad = poison_state(chaos.index, "nan")
+    chaos.schedule_swap(bad, at_step=3)
+    out = chaos.run(_reqs(cfg, 3, 6, 10))
+    assert chaos._pending_swap is None            # the attempt happened
+    assert chaos.stats.swap_rejected == 1 and chaos.stats.swaps == 0
+    assert chaos.stats.health()["ok"] is False
+    for rid in plain:
+        np.testing.assert_array_equal(plain[rid].tokens, out[rid].tokens)
+
+
+def test_swap_index_accepts_valid_rebuild():
+    cfg = _serve_cfg()
+    eng = Engine(cfg, init_key=jax.random.PRNGKey(2), head="midx")
+    assert eng.swap_index(eng.rebuild_index()) is True
+    assert eng.stats.swaps == 1 and eng.stats.swap_rejected == 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end chaos: corrupt checkpoint + NaN mid-run + degenerate swap
+# ---------------------------------------------------------------------------
+
+def test_e2e_chaos_recovery(tiny_cfg, corpus, tmp_path):
+    """The acceptance scenario: corrupt the latest checkpoint, resume (the
+    walk-back restores the older one), inject a NaN step mid-run (skipped,
+    rolled back, replayed), and attempt one degenerate index swap during
+    decode (refused). The train loss must match the uninterrupted run to
+    within 1% at the same horizon and serving must be token-identical to
+    the fault-free replay."""
+    kw = dict(batch_size=8, seq_len=32, corpus=corpus, lr=1e-3,
+              log_every=1000, total_steps=16)
+    # uninterrupted reference
+    p_ref, _, i_ref, h_ref = train_loop(tiny_cfg, steps=16, **kw)
+
+    ck = str(tmp_path / "ck")
+    train_loop(tiny_cfg, steps=8, ckpt_dir=ck, ckpt_every=4, **kw)
+    inj = FaultInjector(7, [FaultSpec("nan_loss", step=11)])
+    corrupted = inj.corrupt_checkpoint(ck, mode="bitflip")
+    assert corrupted == 8
+    p2, _, i2, h2 = train_loop(
+        tiny_cfg, steps=16, ckpt_dir=ck, ckpt_every=4, injector=inj,
+        guardrails=GuardrailConfig(max_consecutive_bad=1,
+                                   warmup_steps=10 ** 6), **kw)
+    assert ("nan_loss", 11) in inj.fired
+    # walked back past the corrupt step-8 dir to step 4, replayed to 16:
+    # final loss within 1% of the uninterrupted run (bit-exact, in fact)
+    assert abs(h2[-1] - h_ref[-1]) <= 0.01 * abs(h_ref[-1])
+    for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+    # serving leg: the trained state decodes; one degenerate swap attempt
+    # mid-stream is refused and the tokens match the fault-free replay
+    scfg = tiny_cfg.with_serve(max_slots=2, page_size=4, max_seq=48)
+    plain = Engine(scfg, p_ref, index=i_ref, head="midx").run(
+        _reqs(scfg, 2, 6, 8))
+    chaos_eng = Engine(scfg, p2, index=i2, head="midx")
+    chaos_eng.schedule_swap(poison_state(i2, "zero"), at_step=2)
+    out = chaos_eng.run(_reqs(scfg, 2, 6, 8))
+    assert chaos_eng.stats.swap_rejected == 1
+    for rid in plain:
+        np.testing.assert_array_equal(plain[rid].tokens, out[rid].tokens)

@@ -47,11 +47,14 @@ def test_page_pool_invariants():
 def test_scheduler_rejects_request_larger_than_pool():
     """A request that fits a slot's page table but not the whole pool must be
     rejected at submit — otherwise the engine loop would wait for pages that
-    can never exist (livelock)."""
+    can never exist (livelock). Rejection is structured (DESIGN §11), not an
+    exception: bad traffic degrades the service, it doesn't crash it."""
     pool = PagePool(num_pages=3, page_size=4, pages_per_slot=7, num_slots=1)
     sched = Scheduler(1, pool)
-    with pytest.raises(ValueError):
-        sched.submit(Request(rid=0, tokens=np.zeros(8, np.int32), max_new=16))
+    rej = sched.submit(Request(rid=0, tokens=np.zeros(8, np.int32),
+                               max_new=16))
+    assert rej is not None and rej.reason == "oversized_pool"
+    assert rej.rid == 0 and not sched.queue
 
 
 def test_scheduler_next_arrival_is_fifo_head():
