@@ -67,14 +67,60 @@ def run(fast: bool = True):
         return jax.jit(lambda p, hh: jax.value_and_grad(loss)(p, hh))
 
     rows = []
+    timings = {}
     for name, fused in (("unfused", False), ("fused", True)):
         fn = step(fused)
         us = timeit(fn, params, h, repeats=3 if interpret and fused else 10)
+        timings[name] = us
         tok_s = t / (us * 1e-6)
         mode = ("pallas" if backend == "tpu" else
                 ("interpret" if fused else "xla"))
         rows.append((f"head_step/{name}_per_token", us,
                      f"tok_s={tok_s:.0f};backend={backend};impl={mode}"))
+
+    # quantized head (DESIGN §12): same step with an int8 class table +
+    # per-row fp32 scales. Wall clock on this backend, plus modeled vs
+    # measured (XLA cost_analysis "bytes accessed") step bytes — on CPU the
+    # measured number covers the whole XLA step, so the comparison is the
+    # bf16→int8 *delta*, which is table traffic by construction.
+    qcfg = cfg.with_head(table_dtype="int8")
+    qindex = heads.init_head_state(qcfg, params, jax.random.fold_in(key, 1))
+
+    def qstep(fused):
+        def loss(p, hh):
+            return heads.loss_midx(qcfg, p, qindex, hh, labels, skey,
+                                   fused=fused, interpret=fused and interpret)
+        return jax.jit(lambda p, hh: jax.value_and_grad(loss)(p, hh))
+
+    for name, fused in (("unfused", False), ("fused", True)):
+        fn = qstep(fused)
+        us = timeit(fn, params, h, repeats=3 if interpret and fused else 10)
+        base = timings[name]
+        mode = ("pallas" if backend == "tpu" else
+                ("interpret" if fused else "xla"))
+        rows.append((f"head_step/{name}_per_token_int8", us,
+                     f"speedup_vs_fp={base / us:.2f}x;backend={backend};"
+                     f"impl={mode}"))
+
+    def _measured_bytes(fn):
+        ca = fn.lower(params, h).compile().cost_analysis()
+        if isinstance(ca, list):           # older jax returns [dict]
+            ca = ca[0]
+        return float((ca or {}).get("bytes accessed", 0.0))
+
+    fp_meas = _measured_bytes(step(False))
+    q_meas = _measured_bytes(qstep(False))
+    # modeled per-step table READ traffic: the fp path upcasts the whole
+    # bf16 table to fp32 and gathers fp32 rows; the int8 path gathers int8
+    # rows + fp32 per-row scales and never touches a full-width table.
+    fp_model = 4.0 * (v * d + t * (m + 1) * d)
+    q_model = 1.0 * (t * (m + 1) * d) + 4.0 * t * (m + 1)
+    rows.append(("head_step/table_bytes_fp_mb", fp_model / 2**20,
+                 f"measured_step_mb={fp_meas / 2**20:.1f};model=table+gather"))
+    rows.append(("head_step/table_bytes_int8_mb", q_model / 2**20,
+                 f"model_reduction={fp_model / q_model:.1f}x;"
+                 f"measured_step_mb={q_meas / 2**20:.1f};"
+                 f"measured_delta_mb={(fp_meas - q_meas) / 2**20:.1f}"))
 
     for tag, (tt, mm, dd, vv) in (
             ("bench", (t, m, d, v)),
@@ -100,4 +146,25 @@ def run(fast: bool = True):
     rows.append(("head_step/v10m_vocab_parallel8_gb", vp_gb,
                  f"vp={vp};rows_per_shard={v10 // vp};"
                  f"saved_gb={rep_gb - vp_gb:.1f}"))
+
+    # same V=10M cell with the int8 hot-path table (DESIGN §12): 1 byte/elem
+    # rows + one fp32 scale per row, vs the 4·V·D fp32 table every decode
+    # rescore / proposal pass otherwise streams. PQ-code rescore replaces
+    # even the int8 row gather at decode (n_sub codes + 2 assigns/class).
+    q_table_b = 1.0 * v10 * d10 + 4.0 * v10
+    q_rep_gb = (q_table_b + index_b) / 2**30
+    q_vp_gb = ((q_table_b + index_b) / vp) / 2**30
+    n_sub = 16
+    pq_b = 1.0 * v10 * n_sub + 4.0 * 2 * v10      # codes + joint assigns
+    rows.append(("head_step/v10m_int8_table_gb", q_table_b / 2**30,
+                 f"fp32_gb={table_b / 2**30:.1f};"
+                 f"reduction={table_b / q_table_b:.2f}x"))
+    rows.append(("head_step/v10m_int8_replicated_gb", q_rep_gb,
+                 f"fp32_gb={rep_gb:.1f};reduction={rep_gb / q_rep_gb:.2f}x"))
+    rows.append(("head_step/v10m_int8_vocab_parallel8_gb", q_vp_gb,
+                 f"vp={vp};fp32_gb={vp_gb:.1f};"
+                 f"saved_gb={vp_gb - q_vp_gb:.2f}"))
+    rows.append(("head_step/v10m_pq_rescore_gb", pq_b / 2**30,
+                 f"n_sub={n_sub};vs_int8_rows={q_table_b / pq_b:.1f}x;"
+                 f"vs_fp32_rows={table_b / pq_b:.0f}x"))
     return rows

@@ -1,0 +1,120 @@
+"""Quantized hot path (DESIGN §12): error model + PQ-rescore KL + step time.
+
+Three questions, one row group each:
+
+  quant/err/*        — per-row dequantization error of the low-bit class
+                       table (relative Frobenius + worst row), int8 vs fp8.
+  quant/pq_kl/*      — KL(exact softmax ‖ code-approximated softmax) over
+                       the full vocabulary: how far the decode rescore
+                       (coarse codeword scores + ADC residual, DESIGN §12)
+                       sits from exact logits. `exact_codebooks` isolates
+                       the PQ-residual error; int8/fp8 add codebook
+                       quantization on top — the full decode path.
+  quant/head_step/*  — measured loss+grad wall clock of the int8 head vs
+                       full precision on this backend (CPU numbers measure
+                       XLA/interpreter overhead, not HBM savings — the
+                       `backend=` tag says which machine produced the row).
+
+Structured ("trained") embeddings, as in bench_kl: cluster centers plus
+small residuals, the regime where the paper's MIDX proposal is tight.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.configs.base import HeadConfig, ModelConfig
+from repro.index.build import build as build_index
+from repro.index.quantization import query_scores
+from repro.index.quantized import (code_scores, dequantize,
+                                   fit_residual_codes, quantize_head_state,
+                                   quantize_rows, quantized_query_scores)
+from repro.models import heads, init_params
+
+
+def _structured_table(key, n, d, k=16):
+    centers = jax.random.normal(key, (k, d)) * 2.0
+    cl = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, k)
+    return centers[cl] + 0.15 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, d))
+
+
+def _kl(log_p, log_q):
+    return float(jnp.mean(jnp.sum(jnp.exp(log_p) * (log_p - log_q), -1)))
+
+
+def run(fast: bool = True):
+    rows = []
+    n, d, k = (512, 64, 8) if fast else (4096, 128, 16)
+    key = jax.random.PRNGKey(0)
+    table = _structured_table(key, n, d)
+
+    # -- dequant error of the row formats -------------------------------
+    for fmt in ("int8", "fp8"):
+        q, s = quantize_rows(table, fmt)
+        deq = dequantize(q, s)
+        err = jnp.linalg.norm(deq - table, axis=-1) / (
+            jnp.linalg.norm(table, axis=-1) + 1e-30)
+        rows.append((f"quant/err/{fmt}", float(jnp.mean(err)),
+                     f"max_row_rel={float(jnp.max(err)):.2e}"))
+
+    # -- PQ-rescore KL vs exact softmax ---------------------------------
+    z = 0.5 * jax.random.normal(jax.random.fold_in(key, 3), (16, d))
+    log_p = jax.nn.log_softmax(z @ table.T, axis=-1)
+    index = build_index(jax.random.fold_in(key, 4), table, k=k, iters=4)
+    all_ids = jnp.broadcast_to(jnp.arange(n), (z.shape[0], n))
+
+    s1x, s2x = query_scores(index.kind, index.codebook1, index.codebook2, z)
+    rc = fit_residual_codes(jax.random.fold_in(key, 5), index.residuals)
+    approx = code_scores(index, rc, z, all_ids, s1x, s2x)
+    rows.append(("quant/pq_kl/exact_codebooks",
+                 _kl(log_p, jax.nn.log_softmax(approx, -1)),
+                 f"n_sub={rc.n_sub};ksub={rc.ksub}"))
+    # coarse-only reference: what the rescore would be without ADC codes
+    coarse = (jnp.take_along_axis(s1x, index.assign1[all_ids], -1) +
+              jnp.take_along_axis(s2x, index.assign2[all_ids], -1))
+    rows.append(("quant/pq_kl/coarse_only",
+                 _kl(log_p, jax.nn.log_softmax(coarse, -1)),
+                 "no ADC residual term"))
+
+    for fmt in ("int8", "fp8"):
+        qs = quantize_head_state(index, table, fmt,
+                                 key=jax.random.fold_in(key, 6))
+        s1q, s2q = quantized_query_scores(
+            index.kind, qs.qcb1, qs.qcb1_scale, qs.qcb2, qs.qcb2_scale, z)
+        aq = code_scores(index, qs.residual_codes, z, all_ids, s1q, s2q)
+        rows.append((f"quant/pq_kl/{fmt}",
+                     _kl(log_p, jax.nn.log_softmax(aq, -1)),
+                     "full decode path: quantized codebooks + ADC"))
+
+    # -- measured head step, fp vs int8 ---------------------------------
+    cfg = ModelConfig(
+        name="bench-quant", family="dense", num_layers=1, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=2000,
+        head_dim=16, vocab_pad_multiple=16, remat=False,
+        head=HeadConfig(mode="midx", midx_k=16, num_negatives=32,
+                        proposal="per_token", kmeans_iters=3))
+    params = init_params(cfg, key)
+    b, s = 2, 64
+    h = 0.3 * jax.random.normal(jax.random.fold_in(key, 7),
+                                (b, s, cfg.d_model), jnp.float32)
+    labels = jax.random.randint(jax.random.fold_in(key, 8), (b, s), 0,
+                                cfg.vocab_size)
+    skey = jax.random.fold_in(key, 9)
+    backend = jax.default_backend()
+    times = {}
+    for fmt in ("bf16", "int8"):
+        fcfg = cfg.with_head(table_dtype=fmt)
+        idx = heads.init_head_state(fcfg, params, jax.random.fold_in(key, 1))
+
+        def loss(p, hh, _cfg=fcfg, _idx=idx):
+            return heads.loss_midx(_cfg, p, _idx, hh, labels, skey,
+                                   fused=False)
+
+        fn = jax.jit(lambda p, hh, _l=loss: jax.value_and_grad(_l)(p, hh))
+        times[fmt] = timeit(fn, params, h, repeats=5)
+    rows.append(("quant/head_step/int8_us", times["int8"],
+                 f"speedup_vs_fp={times['bf16'] / times['int8']:.2f}x;"
+                 f"backend={backend}"))
+    return rows

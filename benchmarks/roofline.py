@@ -124,6 +124,7 @@ def analyze_record(rec: dict, calib: dict) -> dict:
     return {
         **{k: rec[k] for k in ("arch", "shape", "kind", "head", "mesh",
                                "chips")},
+        "table_dtype": rec.get("table_dtype"),
         "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
         "dominant": dominant, "model_flops": mf,
         "useful_ratio": mf / c["flops"] if c["flops"] else 0.0,
@@ -164,8 +165,14 @@ def run(fast: bool = True):
         a = analyze_record(r, calib)
         t_bound = max(a["compute_s"], a["memory_s"], a["collective_s"])
         mesh = "x".join(map(str, a["mesh"]))
-        rows.append((f"roofline/{a['arch']}/{a['shape']}/{mesh}/{a['head']}",
-                     t_bound * 1e6,
+        # low-bit table cells (dryrun --table-dtype, DESIGN §12): name the
+        # format so fp/int8 variants of the same cell land as distinct rows
+        # and the memory_s delta between them is the measured table-bytes
+        # win at the roofline level.
+        name = f"roofline/{a['arch']}/{a['shape']}/{mesh}/{a['head']}"
+        if a["table_dtype"]:
+            name += f"/{a['table_dtype']}"
+        rows.append((name, t_bound * 1e6,
                      f"dominant={a['dominant']};frac={a['roofline_frac']:.4f}"))
     return rows
 

@@ -18,8 +18,8 @@ import traceback
 
 from benchmarks import (bench_codewords, bench_grad_bias, bench_head_step,
                         bench_index_refresh, bench_kl, bench_learnable,
-                        bench_lm_ppl, bench_proposals, bench_recsys,
-                        bench_resilience, bench_sample_size,
+                        bench_lm_ppl, bench_proposals, bench_quant,
+                        bench_recsys, bench_resilience, bench_sample_size,
                         bench_sampling_time, bench_serve, bench_xmc,
                         roofline)
 
@@ -38,6 +38,7 @@ ALL = {
     "index_refresh": bench_index_refresh,   # lifecycle: rebuild paths + KL (§8)
     "proposals": bench_proposals,           # registry bake-off: KL/bias/conv (§10)
     "resilience": bench_resilience,         # fault recovery costs (§11)
+    "quant": bench_quant,                   # low-bit table + PQ rescore (§12)
     "roofline": roofline,                   # §Roofline (from dry-run JSONs)
 }
 

@@ -64,6 +64,30 @@ def _leaf_crc(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
+def _storable(arr: np.ndarray) -> np.ndarray:
+    """np.savez only round-trips builtin dtypes; extension dtypes (bfloat16,
+    float8_*) come back as opaque void fields. Store their raw bits as a
+    same-width unsigned view — tree.json records the true dtype and restore
+    views the bits back. The bytes are unchanged, so the recorded CRC32s
+    cover the stored data either way."""
+    if arr.dtype.kind == "V":
+        return arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+    return arr
+
+
+def _from_storable(arr: np.ndarray, dtype_str: Optional[str]) -> np.ndarray:
+    """Undo `_storable` given the true dtype recorded in tree.json. Also
+    heals checkpoints written before the raw-bits scheme, whose extension
+    leaves load as void fields of the same width."""
+    if dtype_str is None:
+        return arr
+    true = np.dtype(dtype_str)
+    if arr.dtype != true and true.kind == "V" and \
+            arr.dtype.itemsize == true.itemsize:
+        return arr.view(true)
+    return arr
+
+
 def _parse_step(name: str) -> Optional[int]:
     if not name.startswith("step_") or name.endswith((".tmp", ".old")):
         return None
@@ -127,7 +151,8 @@ class CheckpointManager:
         host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
         arrays_path = os.path.join(tmp, "arrays.npz")
         np.savez(arrays_path,
-                 **{f"leaf_{i}": l for i, l in enumerate(host_leaves)})
+                 **{f"leaf_{i}": _storable(l)
+                    for i, l in enumerate(host_leaves)})
         self._fault("arrays", step)
         _fsync_path(arrays_path)
         spec = {
@@ -249,8 +274,10 @@ class CheckpointManager:
             raise CheckpointError(
                 f"{d}: treedef mismatch — the checkpoint was saved from a "
                 "different pytree structure than the restore target")
+        dtypes = spec.get("dtypes") or [None] * spec["num_leaves"]
         with np.load(os.path.join(d, "arrays.npz")) as z:
-            leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+            leaves = [_from_storable(z[f"leaf_{i}"], dtypes[i])
+                      for i in range(len(z.files))]
         if verify and spec.get("crc32"):
             for i, leaf in enumerate(leaves):
                 if _leaf_crc(leaf) != spec["crc32"][i]:

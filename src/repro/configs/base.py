@@ -62,6 +62,17 @@ class HeadConfig:
     # kernels (TPU, or interpret mode) — elsewhere kernels.dispatch falls
     # back to the jnp path, so this default is safe for the CPU suite.
     use_fused_head: bool = True
+    # Quantized hot path (DESIGN §12): storage dtype of the class table on
+    # the head's hot path — 'bf16' keeps the native-precision table; 'int8'
+    # / 'fp8' (e4m3) add a per-row-scaled low-bit copy that the CE kernels,
+    # proposal pass and decode head read, with the master-precision table
+    # retained for the optimizer update (straight-through estimator).
+    # Unknown values raise at step-build time (steps.resolve_table_dtype).
+    table_dtype: str = "bf16"
+    # Re-quantize the low-bit copy (and refit the residual codes) at every
+    # index refresh event, riding the IndexLifecycle double buffer; False
+    # freezes the low-bit copy at its init-time values.
+    quantize_on_refresh: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

@@ -125,7 +125,8 @@ def twostage_tables(index: MultiIndex, z: jax.Array):
 
 
 def sample_twostage(index: MultiIndex, key: jax.Array, z: jax.Array,
-                    m: int, *, tables_fn=None, member_fn=None) -> Draw:
+                    m: int, *, tables_fn=None, member_fn=None,
+                    return_tables: bool = False):
     """Per-token fast MIDX via the paper's sequential two stages, vectorized:
     k1 ~ Cat(s1+logψ), then k2 ~ Cat(s2+log|Ω(k1,:)|), then uniform member.
     Identical distribution to `sample` (chain rule) but O(K) per draw instead
@@ -134,7 +135,12 @@ def sample_twostage(index: MultiIndex, key: jax.Array, z: jax.Array,
     `tables_fn(index, z) -> (s1, s2, log_psi, lse)` optionally replaces
     `twostage_tables` — this is the hook the fused head uses to run the
     one-pass midx_probs Pallas kernel (`kernels.dispatch.midx_tables_fn`)
-    instead of the jnp oracle. core/ stays kernel-free."""
+    instead of the jnp oracle. core/ stays kernel-free.
+
+    `return_tables=True` additionally returns the (s1, s2, log_psi, lse)
+    tables the draw consumed — the quantized decode head rescores candidates
+    from these plus the PQ residual codes (code_scores) without a second
+    pass over z or any [V, D] row gather."""
     k1_key, k2_key, k_member = jax.random.split(key, 3)
     s1, s2, log_psi, lse = (tables_fn or twostage_tables)(index, z)
     l1 = (s1 + log_psi)[..., None, :]                          # [..., 1, K]
@@ -149,7 +155,10 @@ def sample_twostage(index: MultiIndex, key: jax.Array, z: jax.Array,
     s1_sel = jnp.take_along_axis(s1, k1, axis=-1)
     s2_sel = jnp.take_along_axis(s2, k2, axis=-1)
     log_q = s1_sel + s2_sel - lse[..., None]
-    return Draw(ids.astype(jnp.int32), log_q)
+    draw = Draw(ids.astype(jnp.int32), log_q)
+    if return_tables:
+        return draw, (s1, s2, log_psi, lse)
+    return draw
 
 
 # ---------------------------------------------------------------------------
@@ -179,24 +188,34 @@ def _shared_draw(index: MultiIndex, key: jax.Array, flat_log: jax.Array,
     return Draw(ids.astype(jnp.int32), log_q)
 
 
+def _joint_from_scores(index: MultiIndex, z: jax.Array, scores_fn):
+    """joint_logits with an optional (index, z) -> (s1, s2) replacement —
+    the quantized head scores the low-bit codebooks through this hook."""
+    if scores_fn is None:
+        return joint_logits(index, z)
+    s1, s2 = scores_fn(index, z)
+    j = s1[..., :, None] + s2[..., None, :] + index.log_counts
+    return j, s1, s2
+
+
 def sample_pooled(index: MultiIndex, key: jax.Array, z_seq: jax.Array,
-                  m: int, *, member_fn=None) -> Draw:
+                  m: int, *, member_fn=None, scores_fn=None) -> Draw:
     """Pooled proposal: mean query per sequence. z_seq: [B, S, D] -> [B, m]."""
     z_bar = jnp.mean(z_seq.astype(jnp.float32), axis=-2)       # [B, D]
-    j, _, _ = joint_logits(index, z_bar)
+    j, _, _ = _joint_from_scores(index, z_bar, scores_fn)
     flat = j.reshape(*j.shape[:-2], -1)
     return _shared_draw(index, key, flat, m, member_fn)
 
 
 def sample_mixture(index: MultiIndex, key: jax.Array, z_seq: jax.Array,
-                   m: int, *, member_fn=None) -> Draw:
+                   m: int, *, member_fn=None, scores_fn=None) -> Draw:
     """Exact token-mixture proposal per sequence.
 
     P̄[k,k'] ∝ |Ω| ⊙ Σ_t a_t[k] b_t[k'],  a_t = exp(s1_t)/Z_t, b_t = exp(s2_t)
     where Z_t is the per-token joint normalizer — one K×S @ S×K einsum.
     log_q returned is w.r.t. this mixture (exact IS correction).
     """
-    j, s1, s2 = joint_logits(index, z_seq)                      # [B,S,K,K]
+    j, s1, s2 = _joint_from_scores(index, z_seq, scores_fn)     # [B,S,K,K]
     kk = index.num_codewords
     flat = j.reshape(*j.shape[:-2], kk * kk)
     log_z = jax.nn.logsumexp(flat, axis=-1)                     # [B,S]

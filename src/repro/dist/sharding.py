@@ -182,6 +182,31 @@ def head_table_spec(*, padded_vocab: int, vp: int,
     return P(vocab_axis, None)
 
 
+def head_scale_spec(*, padded_vocab: int, vp: int,
+                    vocab_axis: str = "vocab") -> P:
+    """Row spec of the [Vpad, 1] per-row scale vector of a quantized class
+    table (DESIGN §12). Per-row symmetric quantization makes the scales
+    row-local, so they shard exactly like the table rows — same
+    divisibility contract as `head_table_spec`."""
+    return head_table_spec(padded_vocab=padded_vocab, vp=vp,
+                           vocab_axis=vocab_axis)
+
+
+def quant_head_specs(qs_abs, *, vp: int, vocab_axis: str = "vocab"):
+    """Specs for an index.quantized.QuantHeadState under vocab parallelism:
+    the [V,D] low-bit table, its [V,1] scales and the [V,n_sub] PQ codes
+    row-shard over the vocab axis; the tiny codebooks (+ their scales and
+    sub-codebooks) and the MultiIndex replicate (index_specs contract)."""
+    import dataclasses as _dc
+    v = qs_abs.qdata.shape[0]
+    row = head_table_spec(padded_vocab=v, vp=vp, vocab_axis=vocab_axis)
+    scale = head_scale_spec(padded_vocab=v, vp=vp, vocab_axis=vocab_axis)
+    replicated = jax.tree_util.tree_map(
+        lambda leaf: P(*([None] * leaf.ndim)), qs_abs)
+    return _dc.replace(replicated, index=index_specs(qs_abs.index),
+                       qdata=row, qscale=scale, codes=row)
+
+
 def vocab_param_specs(cfg, params_abs, *, vp: int,
                       vocab_axis: str = "vocab"):
     """Param specs for the vocab-parallel train step: the top-level class

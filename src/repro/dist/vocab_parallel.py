@@ -46,9 +46,14 @@ from repro.core import midx as midx_mod
 from repro.core.index import MultiIndex, _csr_from_assignments
 from repro.core.sampled_softmax import (NEG_INF, NEG_INF_THRESHOLD,
                                         partial_sampled_lse)
+from repro.index.quantized import (dequant_rows, quantize_rows,
+                                   quantized_query_scores,
+                                   resolve_table_dtype)
 from repro.kernels import dispatch as kd
 from repro.kernels.sampled_ce.ops import (sampled_ce_partial_op,
-                                          sampled_ce_pt_partial_op)
+                                          sampled_ce_pt_partial_op,
+                                          sampled_ce_pt_q_partial_op,
+                                          sampled_ce_q_partial_op)
 
 
 @functools.partial(jax.tree_util.register_dataclass,
@@ -202,7 +207,15 @@ def loss_midx_vp(cfg, table_local: jax.Array, local_idx: MultiIndex,
     `local_index`. Matches `heads.loss_midx` on the replicated layout to
     ≤1e-5 — loss AND grads, no scaling needed — for all three proposals,
     fused and unfused (shard_map transposes replicated in-specs to a
-    cross-shard cotangent sum, so autodiff through the psums is exact)."""
+    cross-shard cotangent sum, so autodiff through the psums is exact).
+
+    cfg.head.table_dtype int8/fp8 turns on the quantized shard path
+    (DESIGN §12): the shard quantizes its OWN row slice in-step (per-row
+    scales are row-local, so the [rows,1] scale vector shards with the
+    table for free), proposal scoring quantizes the replicated codebooks
+    the same way the replicated QuantHeadState does (bitwise-equal draws),
+    and the partial CE runs the quantized kernels / `dequant_rows` with
+    STE gradients landing on the master `table_local`."""
     m = cfg.head.num_negatives
     rows = table_local.shape[0]
     shard = jax.lax.axis_index(axis)
@@ -211,6 +224,13 @@ def loss_midx_vp(cfg, table_local: jax.Array, local_idx: MultiIndex,
     interpret = interpret or kd.interpret_default()
     use_fused = kd.fused_head_active(cfg.head, fused=fused,
                                     interpret=interpret)
+    fmt = resolve_table_dtype(getattr(cfg.head, "table_dtype", "bf16"))
+    quantized = fmt != "bf16"
+    if quantized:
+        qd, qsc = quantize_rows(jax.lax.stop_gradient(
+            table_local.astype(jnp.float32)), fmt)               # [rows,·]
+        qcb1, scb1 = quantize_rows(local_idx.codebook1, fmt)
+        qcb2, scb2 = quantize_rows(local_idx.codebook2, fmt)
     prop = proposal_index(local_idx, axis)
     member = make_member_fn(local_idx, prop.counts, axis=axis)
 
@@ -219,14 +239,23 @@ def loss_midx_vp(cfg, table_local: jax.Array, local_idx: MultiIndex,
     okp = (lpos >= 0) & (lpos < rows)
     lpos_c = jnp.where(okp, lpos, 0)
     pid_local = jnp.where(okp, lpos_c, -1)
-    pos_e = table_local[lpos_c].astype(jnp.float32)              # [B,S,D]
+    if quantized:
+        pos_e = dequant_rows(table_local, qd, qsc, lpos_c)       # [B,S,D]
+    else:
+        pos_e = table_local[lpos_c].astype(jnp.float32)          # [B,S,D]
     pos_logit = jax.lax.psum(
         jnp.where(okp, jnp.sum(h32 * pos_e, axis=-1), 0.0), axis)
 
     proposal = cfg.head.proposal
     if proposal == "per_token":
-        tables_fn = (kd.midx_tables_fn(use_kernel=True, interpret=interpret)
-                     if use_fused else None)
+        if quantized:
+            tables_fn = kd.midx_tables_fn_q(qcb1, scb1, qcb2, scb2,
+                                            use_kernel=use_fused,
+                                            interpret=interpret)
+        else:
+            tables_fn = (kd.midx_tables_fn(use_kernel=True,
+                                           interpret=interpret)
+                         if use_fused else None)
         draw = midx_mod.sample_twostage(prop, key, h32, m,
                                         tables_fn=tables_fn,
                                         member_fn=member)        # [B,S,M]
@@ -235,12 +264,21 @@ def loss_midx_vp(cfg, table_local: jax.Array, local_idx: MultiIndex,
         lneg_c = jnp.where(okn, lneg, 0)
         if use_fused:
             lq_m = jnp.where(okn, draw.log_q, -NEG_INF)
-            partial = sampled_ce_pt_partial_op(
-                h32.reshape(b * s, d), table_local,
-                lq_m.reshape(b * s, m), lneg_c.reshape(b * s, m),
-                pid_local.reshape(b * s), m, interpret).reshape(b, s)
+            if quantized:
+                partial = sampled_ce_pt_q_partial_op(
+                    h32.reshape(b * s, d), table_local, qd, qsc,
+                    lq_m.reshape(b * s, m), lneg_c.reshape(b * s, m),
+                    pid_local.reshape(b * s), m, interpret).reshape(b, s)
+            else:
+                partial = sampled_ce_pt_partial_op(
+                    h32.reshape(b * s, d), table_local,
+                    lq_m.reshape(b * s, m), lneg_c.reshape(b * s, m),
+                    pid_local.reshape(b * s), m, interpret).reshape(b, s)
         else:
-            neg_e = table_local[lneg_c].astype(jnp.float32)      # [B,S,M,D]
+            if quantized:
+                neg_e = dequant_rows(table_local, qd, qsc, lneg_c)
+            else:
+                neg_e = table_local[lneg_c].astype(jnp.float32)  # [B,S,M,D]
             neg_logits = jnp.einsum("bsd,bsmd->bsm", h32, neg_e)
             partial = partial_sampled_lse(
                 neg_logits, draw.log_q, m, draw.ids, labels,
@@ -248,20 +286,39 @@ def loss_midx_vp(cfg, table_local: jax.Array, local_idx: MultiIndex,
     else:
         sampler = (midx_mod.sample_pooled if proposal == "pooled"
                    else midx_mod.sample_mixture)
-        draw = sampler(prop, key, h32, m, member_fn=member)      # [B,M]
+        scores_fn = None
+        if quantized:
+            scores_fn = (lambda idx, z: quantized_query_scores(
+                idx.kind, qcb1, scb1, qcb2, scb2, z))
+        draw = sampler(prop, key, h32, m, member_fn=member,
+                       scores_fn=scores_fn)                      # [B,M]
         lneg = draw.ids - shard * rows
         okn = (lneg >= 0) & (lneg < rows)
         lneg_c = jnp.where(okn, lneg, 0)
         if use_fused:
             neg_emb = table_local[lneg_c]                        # [B,M,D]
             lq_m = jnp.where(okn, draw.log_q, -NEG_INF)
-            partial = jax.vmap(
-                lambda hb, ne, lq, ni, pi:
-                sampled_ce_partial_op(hb, jnp.zeros_like(hb), ne, lq, ni,
-                                      pi, m, interpret)
-            )(h32, neg_emb, lq_m, lneg_c, pid_local)             # [B,S]
+            if quantized:
+                zero_pq = jnp.zeros((s, d), qd.dtype)
+                one_ps = jnp.ones((s, 1), jnp.float32)
+                partial = jax.vmap(
+                    lambda hb, ne, nq, ns, lq, ni, pi:
+                    sampled_ce_q_partial_op(
+                        hb, jnp.zeros_like(hb), ne, zero_pq, one_ps,
+                        nq, ns, lq, ni, pi, m, interpret)
+                )(h32, neg_emb, qd[lneg_c], qsc[lneg_c],
+                  lq_m, lneg_c, pid_local)                       # [B,S]
+            else:
+                partial = jax.vmap(
+                    lambda hb, ne, lq, ni, pi:
+                    sampled_ce_partial_op(hb, jnp.zeros_like(hb), ne, lq,
+                                          ni, pi, m, interpret)
+                )(h32, neg_emb, lq_m, lneg_c, pid_local)         # [B,S]
         else:
-            neg_e = table_local[lneg_c].astype(jnp.float32)      # [B,M,D]
+            if quantized:
+                neg_e = dequant_rows(table_local, qd, qsc, lneg_c)
+            else:
+                neg_e = table_local[lneg_c].astype(jnp.float32)  # [B,M,D]
             neg_logits = jnp.einsum("bsd,bmd->bsm", h32, neg_e)
             partial = partial_sampled_lse(
                 neg_logits, draw.log_q[:, None, :], m,

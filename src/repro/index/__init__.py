@@ -32,6 +32,13 @@ from repro.index.build import (MultiIndex, build, from_quantization,
 from repro.index.lifecycle import (REFRESH_POLICIES, IndexLifecycle,
                                    RefreshEvent, drift_metrics,
                                    refresh_adaptive, refresh_with_policy)
+from repro.index.quantized import (TABLE_DTYPES, QuantHeadState,
+                                   QuantizedTable, ResidualCodes,
+                                   code_scores, dequant_rows, dequantize,
+                                   fit_residual_codes, quantize_head_state,
+                                   quantize_rows, quantize_table,
+                                   quantized_query_scores, residual_scores,
+                                   resolve_table_dtype, unwrap_index)
 from repro.index.sharded import kmeans_sharded, refresh_sharded
 
 __all__ = [
@@ -41,5 +48,10 @@ __all__ = [
     "MultiIndex", "build", "from_quantization", "reassign", "refresh",
     "REFRESH_POLICIES", "IndexLifecycle", "RefreshEvent", "drift_metrics",
     "refresh_adaptive", "refresh_with_policy",
+    "TABLE_DTYPES", "QuantHeadState", "QuantizedTable", "ResidualCodes",
+    "code_scores", "dequant_rows", "dequantize", "fit_residual_codes",
+    "quantize_head_state", "quantize_rows", "quantize_table",
+    "quantized_query_scores", "residual_scores", "resolve_table_dtype",
+    "unwrap_index",
     "kmeans_sharded", "refresh_sharded",
 ]

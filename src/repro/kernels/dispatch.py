@@ -87,6 +87,30 @@ def midx_tables_fn(*, use_kernel: Optional[bool] = None,
     return tables_fn
 
 
+def midx_tables_fn_q(qcb1, sc1, qcb2, sc2, *,
+                     use_kernel: Optional[bool] = None,
+                     interpret: bool = False,
+                     block_t: int = 256) -> Callable:
+    """Quantized-codebook `tables_fn` hook (DESIGN §12).
+
+    Unlike midx_tables_fn this ALWAYS returns a callable: in quantized mode
+    the proposal must score the low-bit codebooks on every backend so the
+    draws match the serving head — the jnp fallback applies the same
+    post-dot dequant as the kernel and agrees bit-for-bit.
+    """
+    from repro.kernels.midx_probs.ops import proposal_tables_q
+    interpret = interpret or interpret_default()
+    if use_kernel is None:
+        use_kernel = pallas_supported() or interpret
+
+    def tables_fn(index: MultiIndex, z: jax.Array):
+        return proposal_tables_q(index, qcb1, sc1, qcb2, sc2, z,
+                                 use_kernel=use_kernel, block_t=block_t,
+                                 interpret=interpret)
+
+    return tables_fn
+
+
 def rff_sample_fn(*, use_kernel: Optional[bool] = None,
                   interpret: bool = False) -> Callable:
     """The fused RFF Gumbel-top-m sampler for proposals.rff ('rff-fused').

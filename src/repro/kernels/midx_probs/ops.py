@@ -80,3 +80,69 @@ def proposal_tables(index: MultiIndex, z: jax.Array, *, use_kernel: bool = True,
     k = s1.shape[-1]
     return (s1.reshape(*lead, k), s2.reshape(*lead, k),
             lpsi.reshape(*lead, k), lse.reshape(*lead))
+
+
+# ---------------------------------------------------------------------------
+# quantized codebooks (DESIGN §12): the kernel consumes the 1-byte codebook
+# copies and dequantizes the scores after the dot. The VJP routes the z
+# cotangent through the dequantized-oracle recompute; the low-bit codebooks
+# and their scales are quantization artifacts, not trainable leaves, so
+# their cotangents are None (learnable-codebook mode keeps the fp path).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _tables_q_op(z2d, qcb1, sc1, qcb2, sc2, counts, split: bool,
+                 block_t: int, interpret: bool):
+    zp, t0 = _pad_t(z2d, block_t)
+    s1, s2, lpsi, lse = midx_probs(zp, qcb1, qcb2, counts, scale1=sc1,
+                                   scale2=sc2, split=split, block_t=block_t,
+                                   interpret=interpret)
+    return s1[:t0], s2[:t0], lpsi[:t0], lse[:t0]
+
+
+def _tables_q_fwd(z2d, qcb1, sc1, qcb2, sc2, counts, split, block_t,
+                  interpret):
+    out = _tables_q_op(z2d, qcb1, sc1, qcb2, sc2, counts, split, block_t,
+                       interpret)
+    return out, (z2d, qcb1, sc1, qcb2, sc2, counts)
+
+
+def _tables_q_bwd(split, block_t, interpret, res, g):
+    z2d, qcb1, sc1, qcb2, sc2, counts = res
+
+    def oracle(z):
+        s1, s2, lpsi, lse = midx_probs_ref(z, qcb1, qcb2, counts,
+                                           scale1=sc1, scale2=sc2,
+                                           split=split)
+        return s1, s2, lpsi, lse[:, None]
+
+    _, vjp = jax.vjp(oracle, z2d)
+    (dz,) = vjp(g)
+    return dz, None, None, None, None, None
+
+
+_tables_q_op.defvjp(_tables_q_fwd, _tables_q_bwd)
+
+
+def proposal_tables_q(index: MultiIndex, qcb1, sc1, qcb2, sc2, z: jax.Array,
+                      *, use_kernel: bool = True, block_t: int = 256,
+                      interpret: bool = False):
+    """Quantized-codebook proposal tables: `index` supplies kind + counts,
+    qcb1/qcb2 are the low-bit codebook copies with [K, 1] fp32 scales.
+    Same outputs as proposal_tables; fused and jnp paths apply the scales
+    in the same post-dot order, so they agree bit-for-bit."""
+    split = index.kind == "pq"
+    lead = z.shape[:-1]
+    z2d = z.reshape(-1, z.shape[-1])
+    counts = index.counts.astype(jnp.float32)
+    if not use_kernel:
+        s1, s2, lpsi, lse = midx_probs_ref(z2d, qcb1, qcb2, counts,
+                                           scale1=sc1, scale2=sc2,
+                                           split=split)
+        lse = lse[:, None]
+    else:
+        s1, s2, lpsi, lse = _tables_q_op(z2d, qcb1, sc1, qcb2, sc2, counts,
+                                         split, block_t, interpret)
+    k = s1.shape[-1]
+    return (s1.reshape(*lead, k), s2.reshape(*lead, k),
+            lpsi.reshape(*lead, k), lse.reshape(*lead))

@@ -6,12 +6,16 @@ import jax.numpy as jnp
 
 
 def midx_probs_ref(z: jax.Array, cb1: jax.Array, cb2: jax.Array,
-                   counts: jax.Array, *, split: bool):
+                   counts: jax.Array, *, scale1: jax.Array | None = None,
+                   scale2: jax.Array | None = None, split: bool):
     """z [T, D]; cb1/cb2 [K, Dc] (Dc = D/2 for PQ-split, D for RQ);
     counts [K, K] float32. Returns (s1, s2, log_psi, lse):
       s1/s2 [T, K] codeword scores,
       log_psi[t,k1] = log Σ_k2 counts[k1,k2]·exp(s2[t,k2]),
       lse[t]        = logsumexp_k1(s1 + log_psi)  (Eq.(6) normalizer).
+    scale1/scale2 != None: quantized mode — [K, 1] fp32 per-codeword scales
+    dequantize the scores AFTER the dot, matching the kernel's order of
+    operations bit-for-bit.
     """
     zf = z.astype(jnp.float32)
     if split:
@@ -21,6 +25,9 @@ def midx_probs_ref(z: jax.Array, cb1: jax.Array, cb2: jax.Array,
         z1 = z2 = zf
     s1 = z1 @ cb1.T.astype(jnp.float32)
     s2 = z2 @ cb2.T.astype(jnp.float32)
+    if scale1 is not None:
+        s1 = s1 * scale1.astype(jnp.float32).reshape(1, -1)
+        s2 = s2 * scale2.astype(jnp.float32).reshape(1, -1)
     c2 = jnp.max(s2, axis=-1, keepdims=True)
     psi = jnp.exp(s2 - c2) @ counts.T.astype(jnp.float32)
     log_psi = jnp.log(jnp.maximum(psi, 1e-30)) + c2

@@ -28,6 +28,16 @@ gather; the chunked DMA issue (start `chunk` copies, then wait) overlaps
 latency within a chunk. Collision masking uses the canonical
 `core.sampled_softmax.NEG_INF` and the same validity-guard convention as
 the shared-negative kernel.
+
+Quantized mode (DESIGN §12): pass `scale` ([V, 1] fp32 per-row scales) and
+`table` becomes the low-bit (int8 / fp8) copy. Each row DMA is paired with
+a scale-row DMA and the row is dequantized in-register (`q * s`) before the
+dot — the HBM read per negative shrinks from 4·D (fp32) / 2·D (bf16) bytes
+to D+4. The backward's d-table scatter is scale-UNAWARE by design: under
+the straight-through estimator d(loss)/d(master_row) = coeff · h exactly as
+in the fp path (the row *values* never enter the row-gradient), so the
+scattered buffer is the master-table cotangent and the optimizer keeps
+updating full precision.
 """
 from __future__ import annotations
 
@@ -61,9 +71,14 @@ def _corrected(logits, lq_c, nid_c, pid, num_neg: int):
 # forward
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(h_ref, lq_ref, nid_ref, pid_ref, tab_ref, loss_ref, lse_ref,
-                rows, prow, sem, psem, *, num_neg: int, chunk: int,
-                include_pos: bool = True):
+def _fwd_kernel(h_ref, lq_ref, nid_ref, pid_ref, tab_ref, *rest,
+                num_neg: int, chunk: int, include_pos: bool = True,
+                quantized: bool = False):
+    if quantized:
+        (stab_ref, loss_ref, lse_ref, rows, prow, srows, psrow,
+         sem, psem, ssem, pssem) = rest
+    else:
+        loss_ref, lse_ref, rows, prow, sem, psem = rest
     h = h_ref[...].astype(jnp.float32)                   # [Tb, D]
     lq = lq_ref[...]
     nid = nid_ref[...]
@@ -74,14 +89,26 @@ def _fwd_kernel(h_ref, lq_ref, nid_ref, pid_ref, tab_ref, loss_ref, lse_ref,
         h_t = h[t]                                       # [D]
         if include_pos:
             pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).start()
+            if quantized:
+                pltpu.make_async_copy(stab_ref.at[pid], psrow.at[0],
+                                      pssem).start()
+                pltpu.make_async_copy(stab_ref.at[pid], psrow.at[0],
+                                      pssem).wait()
             pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).wait()
-            pos_logit = jnp.sum(h_t * prow[0, :].astype(jnp.float32))
+            pe = prow[0, :].astype(jnp.float32)
+            if quantized:
+                pe = pe * psrow[0, 0]
+            pos_logit = jnp.sum(h_t * pe)
 
         def chunk_body(c, carry):
             m_acc, l_acc = carry
             base = c * chunk
             _gather_chunk(tab_ref, nid, t, base, rows, sem, chunk)
+            if quantized:
+                _gather_chunk(stab_ref, nid, t, base, srows, ssem, chunk)
             e = rows[...].astype(jnp.float32)            # [chunk, D]
+            if quantized:
+                e = e * srows[...]                       # per-row dequant
             logits = jnp.sum(e * h_t[None, :], axis=-1)  # [chunk]
             lq_c = jax.lax.dynamic_slice(lq, (t, base), (1, chunk))[0]
             nid_c = jax.lax.dynamic_slice(nid, (t, base), (1, chunk))[0]
@@ -116,6 +143,7 @@ def _fwd_kernel(h_ref, lq_ref, nid_ref, pid_ref, tab_ref, loss_ref, lse_ref,
                                              "include_pos", "num_neg"))
 def sampled_ce_pt(hidden: jax.Array, table: jax.Array, log_q: jax.Array,
                   neg_ids: jax.Array, pos_ids: jax.Array, *,
+                  scale: jax.Array | None = None,
                   block_t: int = 128, chunk: int = 8,
                   interpret: bool = False, include_pos: bool = True,
                   num_neg: int | None = None) -> tuple[jax.Array, jax.Array]:
@@ -127,11 +155,15 @@ def sampled_ce_pt(hidden: jax.Array, table: jax.Array, log_q: jax.Array,
     clipped in-range and invalidated via log_q = -NEG_INF), pos_ids is the
     local positive row on the owner shard and -1 elsewhere, and `num_neg`
     gives the GLOBAL negative count for the ln(M·q) correction. Both outputs
-    are the negatives-only partial lse."""
+    are the negatives-only partial lse.
+
+    scale != None: quantized mode — `table` is the low-bit copy and `scale`
+    [V, 1] fp32 holds per-row scales; rows dequantize in-register."""
     t, d = hidden.shape
     m = neg_ids.shape[-1]
     block_t = min(block_t, t)
     chunk = min(chunk, m)
+    quantized = scale is not None
     hidden = _pad_dim(hidden.astype(jnp.float32), block_t)
     pos_ids = _pad_dim(pos_ids, block_t)                 # pad rows sliced off
     log_q = _pad_dim(log_q.astype(jnp.float32), block_t)
@@ -139,17 +171,31 @@ def sampled_ce_pt(hidden: jax.Array, table: jax.Array, log_q: jax.Array,
     neg_ids = _pad_dim(_pad_dim(neg_ids, block_t), chunk, axis=1)
     tp, mp = hidden.shape[0], log_q.shape[1]
     kernel = functools.partial(_fwd_kernel, num_neg=num_neg or m, chunk=chunk,
-                               include_pos=include_pos)
+                               include_pos=include_pos, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
+        pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
+        pl.BlockSpec((block_t,), lambda i: (i,)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    operands = [hidden, log_q, neg_ids, pos_ids, table]
+    scratch = [
+        pltpu.VMEM((chunk, d), table.dtype),
+        pltpu.VMEM((1, d), table.dtype),
+    ]
+    if quantized:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+        operands.append(scale.astype(jnp.float32))
+        scratch += [pltpu.VMEM((chunk, 1), jnp.float32),
+                    pltpu.VMEM((1, 1), jnp.float32)]
+    scratch += [pltpu.SemaphoreType.DMA((chunk,)), pltpu.SemaphoreType.DMA]
+    if quantized:
+        scratch += [pltpu.SemaphoreType.DMA((chunk,)), pltpu.SemaphoreType.DMA]
     loss, lse = pl.pallas_call(
         kernel,
         grid=(tp // block_t,),
-        in_specs=[
-            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
-            pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
-            pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
-            pl.BlockSpec((block_t,), lambda i: (i,)),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
@@ -158,14 +204,9 @@ def sampled_ce_pt(hidden: jax.Array, table: jax.Array, log_q: jax.Array,
             jax.ShapeDtypeStruct((tp, 1), jnp.float32),
             jax.ShapeDtypeStruct((tp, 1), jnp.float32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((chunk, d), table.dtype),
-            pltpu.VMEM((1, d), table.dtype),
-            pltpu.SemaphoreType.DMA((chunk,)),
-            pltpu.SemaphoreType.DMA,
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(hidden, log_q, neg_ids, pos_ids, table)
+    )(*operands)
     return loss[:t, 0], lse[:t, 0]
 
 
@@ -174,9 +215,15 @@ def sampled_ce_pt(hidden: jax.Array, table: jax.Array, log_q: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _bwd_kernel(g_ref, h_ref, lq_ref, nid_ref, pid_ref, lse_ref, tab_ref,
-                dtab_in_ref, dh_ref, dlq_ref, dtab_ref,
-                rows, prow, arow, sem, psem, asem, *,
-                num_neg: int, chunk: int, include_pos: bool = True):
+                *rest, num_neg: int, chunk: int, include_pos: bool = True,
+                quantized: bool = False):
+    if quantized:
+        (stab_ref, dtab_in_ref, dh_ref, dlq_ref, dtab_ref,
+         rows, prow, arow, srows, psrow,
+         sem, psem, asem, ssem, pssem) = rest
+    else:
+        (dtab_in_ref, dh_ref, dlq_ref, dtab_ref,
+         rows, prow, arow, sem, psem, asem) = rest
     del dtab_in_ref  # aliased with dtab_ref; zeros provided by the wrapper
     h = h_ref[...].astype(jnp.float32)                   # [Tb, D]
     lq = lq_ref[...]
@@ -198,11 +245,19 @@ def _bwd_kernel(g_ref, h_ref, lq_ref, nid_ref, pid_ref, lse_ref, tab_ref,
         h_t = h[t]
         if include_pos:
             pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).start()
+            if quantized:
+                pltpu.make_async_copy(stab_ref.at[pid], psrow.at[0],
+                                      pssem).start()
+                pltpu.make_async_copy(stab_ref.at[pid], psrow.at[0],
+                                      pssem).wait()
             pltpu.make_async_copy(tab_ref.at[pid], prow.at[0], psem).wait()
             pe = prow[0, :].astype(jnp.float32)
+            if quantized:
+                pe = pe * psrow[0, 0]
             pos_logit = jnp.sum(h_t * pe)
             p_pos = jnp.exp(pos_logit - lse)
             coeff_pos = g * (p_pos - 1.0)                # dloss/dpos_logit · g
+            # scale-unaware scatter: coeff·h IS d(master row) under the STE
             rmw_row(pid, coeff_pos * h_t)
             dh_init = coeff_pos * pe
         else:
@@ -213,7 +268,11 @@ def _bwd_kernel(g_ref, h_ref, lq_ref, nid_ref, pid_ref, lse_ref, tab_ref,
         def chunk_body(c, dh_t):
             base = c * chunk
             _gather_chunk(tab_ref, nid, t, base, rows, sem, chunk)
+            if quantized:
+                _gather_chunk(stab_ref, nid, t, base, srows, ssem, chunk)
             e = rows[...].astype(jnp.float32)            # [chunk, D]
+            if quantized:
+                e = e * srows[...]
             logits = jnp.sum(e * h_t[None, :], axis=-1)
             lq_c = jax.lax.dynamic_slice(lq, (t, base), (1, chunk))[0]
             nid_c = jax.lax.dynamic_slice(nid, (t, base), (1, chunk))[0]
@@ -238,17 +297,22 @@ def _bwd_kernel(g_ref, h_ref, lq_ref, nid_ref, pid_ref, lse_ref, tab_ref,
 def sampled_ce_pt_bwd(g: jax.Array, hidden: jax.Array, table: jax.Array,
                       log_q: jax.Array, neg_ids: jax.Array,
                       pos_ids: jax.Array, lse: jax.Array, *,
+                      scale: jax.Array | None = None,
                       block_t: int = 128, chunk: int = 8,
                       interpret: bool = False, include_pos: bool = True,
                       num_neg: int | None = None):
     """Fused backward. g/lse [T]; others as sampled_ce_pt.
     -> (dh [T,D] fp32, dtab [V,D] fp32, dlq [T,M] fp32).
-    include_pos=False: lse is the PARTIAL lse; no pos scatter or dh init."""
+    include_pos=False: lse is the PARTIAL lse; no pos scatter or dh init.
+    scale != None: quantized mode — rows dequantize in-register for dh and
+    the softmax-weight recompute, while the dtab scatter stays scale-unaware
+    (it is the straight-through master-table cotangent)."""
     t, d = hidden.shape
     v = table.shape[0]
     m = neg_ids.shape[-1]
     block_t = min(block_t, t)
     chunk = min(chunk, m)
+    quantized = scale is not None
     hidden = _pad_dim(hidden.astype(jnp.float32), block_t)
     g2 = _pad_dim(g.astype(jnp.float32)[:, None], block_t)  # pad g with 0 —
     lse2 = _pad_dim(lse[:, None], block_t)                  # rows contribute 0
@@ -258,20 +322,39 @@ def sampled_ce_pt_bwd(g: jax.Array, hidden: jax.Array, table: jax.Array,
     neg_ids = _pad_dim(_pad_dim(neg_ids, block_t), chunk, axis=1)
     tp, mp = hidden.shape[0], log_q.shape[1]
     kernel = functools.partial(_bwd_kernel, num_neg=num_neg or m, chunk=chunk,
-                               include_pos=include_pos)
+                               include_pos=include_pos, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+        pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
+        pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
+        pl.BlockSpec((block_t,), lambda i: (i,)),
+        pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    operands = [g2, hidden, log_q, neg_ids, pos_ids, lse2, table]
+    if quantized:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+        operands.append(scale.astype(jnp.float32))
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))   # dtab_in (alias)
+    operands.append(jnp.zeros((v, d), jnp.float32))
+    scratch = [
+        pltpu.VMEM((chunk, d), table.dtype),
+        pltpu.VMEM((1, d), table.dtype),
+        pltpu.VMEM((1, d), jnp.float32),
+    ]
+    if quantized:
+        scratch += [pltpu.VMEM((chunk, 1), jnp.float32),
+                    pltpu.VMEM((1, 1), jnp.float32)]
+    scratch += [pltpu.SemaphoreType.DMA((chunk,)),
+                pltpu.SemaphoreType.DMA,
+                pltpu.SemaphoreType.DMA]
+    if quantized:
+        scratch += [pltpu.SemaphoreType.DMA((chunk,)), pltpu.SemaphoreType.DMA]
     dh, dlq, dtab = pl.pallas_call(
         kernel,
         grid=(tp // block_t,),
-        in_specs=[
-            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
-            pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
-            pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
-            pl.BlockSpec((block_t,), lambda i: (i,)),
-            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_t, d), lambda i: (i, 0)),
             pl.BlockSpec((block_t, mp), lambda i: (i, 0)),
@@ -282,16 +365,8 @@ def sampled_ce_pt_bwd(g: jax.Array, hidden: jax.Array, table: jax.Array,
             jax.ShapeDtypeStruct((tp, mp), jnp.float32),
             jax.ShapeDtypeStruct((v, d), jnp.float32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((chunk, d), table.dtype),
-            pltpu.VMEM((1, d), table.dtype),
-            pltpu.VMEM((1, d), jnp.float32),
-            pltpu.SemaphoreType.DMA((chunk,)),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-        ],
-        input_output_aliases={7: 2},
+        scratch_shapes=scratch,
+        input_output_aliases={(8 if quantized else 7): 2},
         interpret=interpret,
-    )(g2, hidden, log_q, neg_ids, pos_ids, lse2,
-      table, jnp.zeros((v, d), jnp.float32))
+    )(*operands)
     return dh[:t], dtab, dlq[:t, :m]

@@ -30,8 +30,12 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.sampled_softmax import NEG_INF, NEG_INF_THRESHOLD
 
 
-def _kernel(h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref, loss_ref,
-            lse_ref, m_ref, l_ref, *, num_neg: int, include_pos: bool = True):
+def _kernel(h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref, *rest,
+            num_neg: int, include_pos: bool = True, quantized: bool = False):
+    if quantized:
+        ps_ref, ns_ref, loss_ref, lse_ref, m_ref, l_ref = rest
+    else:
+        loss_ref, lse_ref, m_ref, l_ref = rest
     im = pl.program_id(1)
     nm = pl.num_programs(1)
 
@@ -42,6 +46,8 @@ def _kernel(h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref, loss_ref,
 
     h = h_ref[...].astype(jnp.float32)                   # [Tb, D]
     ne = ne_ref[...].astype(jnp.float32)                 # [Mb, D]
+    if quantized:
+        ne = ne * ns_ref[...]                            # per-row dequant
     logits = jax.lax.dot_general(h, ne, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)  # [Tb,Mb]
     corr = logits - (jnp.log(float(num_neg)) + lq_ref[...])[None, :]
@@ -63,6 +69,8 @@ def _kernel(h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref, loss_ref,
     def _finish():
         if include_pos:
             pe = pe_ref[...].astype(jnp.float32)         # [Tb, D]
+            if quantized:
+                pe = pe * ps_ref[...]
             pos_logit = jnp.sum(h * pe, axis=-1, keepdims=True)    # [Tb,1]
             m_fin = jnp.maximum(m_ref[...], pos_logit)
             l_fin = (l_ref[...] * jnp.exp(m_ref[...] - m_fin)
@@ -106,6 +114,8 @@ def _padded(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, block_t,
                                              "num_neg"))
 def sampled_ce(hidden: jax.Array, pos_emb: jax.Array, neg_emb: jax.Array,
                log_q: jax.Array, neg_ids: jax.Array, pos_ids: jax.Array, *,
+               pos_scale: jax.Array | None = None,
+               neg_scale: jax.Array | None = None,
                block_t: int = 256, block_m: int = 256,
                interpret: bool = False, include_pos: bool = True,
                num_neg: int | None = None) -> tuple[jax.Array, jax.Array]:
@@ -116,27 +126,41 @@ def sampled_ce(hidden: jax.Array, pos_emb: jax.Array, neg_emb: jax.Array,
     include_pos=False: partial mode for the vocab-parallel head — the
     positive never joins, both outputs are the negatives-only partial lse,
     and `num_neg` gives the GLOBAL negative count for the ln(M·q) correction
-    (defaults to this shard's M)."""
+    (defaults to this shard's M).
+
+    pos_scale/neg_scale != None: quantized mode (DESIGN §12) — pos_emb /
+    neg_emb are gathered rows of the low-bit table and the [T,1]/[M,1] fp32
+    scales dequantize them in-register before the dot."""
     t, d = hidden.shape
     m = neg_emb.shape[0]
     block_t, block_m = min(block_t, t), min(block_m, m)
+    quantized = neg_scale is not None
     hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids = _padded(
         hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, block_t, block_m)
     tp, mp = hidden.shape[0], neg_emb.shape[0]
     grid = (tp // block_t, mp // block_m)
     kernel = functools.partial(_kernel, num_neg=num_neg or m,
-                               include_pos=include_pos)
+                               include_pos=include_pos, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
+        pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
+        pl.BlockSpec((block_m, d), lambda it, im: (im, 0)),
+        pl.BlockSpec((block_m,), lambda it, im: (im,)),
+        pl.BlockSpec((block_m,), lambda it, im: (im,)),
+        pl.BlockSpec((block_t,), lambda it, im: (it,)),
+    ]
+    operands = [hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids]
+    if quantized:
+        if pos_scale is None:
+            pos_scale = jnp.ones((t, 1), jnp.float32)
+        in_specs += [pl.BlockSpec((block_t, 1), lambda it, im: (it, 0)),
+                     pl.BlockSpec((block_m, 1), lambda it, im: (im, 0))]
+        operands += [_pad_dim(pos_scale.astype(jnp.float32), block_t),
+                     _pad_dim(neg_scale.astype(jnp.float32), block_m)]
     loss, lse = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
-            pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
-            pl.BlockSpec((block_m, d), lambda it, im: (im, 0)),
-            pl.BlockSpec((block_m,), lambda it, im: (im,)),
-            pl.BlockSpec((block_m,), lambda it, im: (im,)),
-            pl.BlockSpec((block_t,), lambda it, im: (it,)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_t, 1), lambda it, im: (it, 0)),
             pl.BlockSpec((block_t, 1), lambda it, im: (it, 0)),
@@ -150,7 +174,7 @@ def sampled_ce(hidden: jax.Array, pos_emb: jax.Array, neg_emb: jax.Array,
             pltpu.VMEM((block_t, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids)
+    )(*operands)
     return loss[:t, 0], lse[:t, 0]
 
 
@@ -163,9 +187,12 @@ def sampled_ce(hidden: jax.Array, pos_emb: jax.Array, neg_emb: jax.Array,
 # matrix w = exp(corr - lse) only ever exists one block at a time in VMEM.
 # ---------------------------------------------------------------------------
 
-def _w_block(h, ne_ref, lq_ref, nid_ref, pid_ref, lse, *, num_neg: int):
+def _w_block(h, ne_ref, lq_ref, nid_ref, pid_ref, lse, *, num_neg: int,
+             ns_ref=None):
     """Recompute one [Tb, Mb] block of masked softmax weights."""
     ne = ne_ref[...].astype(jnp.float32)                 # [Mb, D]
+    if ns_ref is not None:
+        ne = ne * ns_ref[...]                            # per-row dequant
     logits = jax.lax.dot_general(h, ne, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
     corr = logits - (jnp.log(float(num_neg)) + lq_ref[...])[None, :]
@@ -176,8 +203,13 @@ def _w_block(h, ne_ref, lq_ref, nid_ref, pid_ref, lse, *, num_neg: int):
 
 
 def _bwd_dh_kernel(g_ref, h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref,
-                   lse_ref, dh_ref, dpe_ref, acc_ref, *, num_neg: int,
-                   include_pos: bool = True):
+                   lse_ref, *rest, num_neg: int, include_pos: bool = True,
+                   quantized: bool = False):
+    if quantized:
+        ps_ref, ns_ref, dh_ref, dpe_ref, acc_ref = rest
+    else:
+        ns_ref = None
+        dh_ref, dpe_ref, acc_ref = rest
     im = pl.program_id(1)
     nm = pl.num_programs(1)
 
@@ -187,7 +219,7 @@ def _bwd_dh_kernel(g_ref, h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref,
 
     h = h_ref[...].astype(jnp.float32)                   # [Tb, D]
     w, ne = _w_block(h, ne_ref, lq_ref, nid_ref, pid_ref, lse_ref[...],
-                     num_neg=num_neg)
+                     num_neg=num_neg, ns_ref=ns_ref)
     acc_ref[...] += jax.lax.dot_general(w, ne, (((1,), (0,)), ((), ())),
                                         preferred_element_type=jnp.float32)
 
@@ -196,9 +228,13 @@ def _bwd_dh_kernel(g_ref, h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref,
         g = g_ref[...]                                   # [Tb, 1]
         if include_pos:
             pe = pe_ref[...].astype(jnp.float32)
+            if quantized:
+                pe = pe * ps_ref[...]
             pos_logit = jnp.sum(h * pe, axis=-1, keepdims=True)
             p_pos = jnp.exp(pos_logit - lse_ref[...])    # [Tb, 1]
             dh_ref[...] = g * (acc_ref[...] + (p_pos - 1.0) * pe)
+            # dpe stays scale-unaware: g·(p_pos−1)·h IS the straight-through
+            # master-row cotangent (row values never enter the row-gradient).
             dpe_ref[...] = g * (p_pos - 1.0) * h
         else:
             # partial mode: d(partial lse)/dh = Σ_j w_j ne_j; no pos terms.
@@ -207,8 +243,12 @@ def _bwd_dh_kernel(g_ref, h_ref, pe_ref, ne_ref, lq_ref, nid_ref, pid_ref,
 
 
 def _bwd_dne_kernel(g_ref, h_ref, ne_ref, lq_ref, nid_ref, pid_ref,
-                    lse_ref, dne_ref, dlq_ref, ne_acc, lq_acc, *,
-                    num_neg: int):
+                    lse_ref, *rest, num_neg: int, quantized: bool = False):
+    if quantized:
+        ns_ref, dne_ref, dlq_ref, ne_acc, lq_acc = rest
+    else:
+        ns_ref = None
+        dne_ref, dlq_ref, ne_acc, lq_acc = rest
     it = pl.program_id(1)
     nt = pl.num_programs(1)
 
@@ -219,7 +259,7 @@ def _bwd_dne_kernel(g_ref, h_ref, ne_ref, lq_ref, nid_ref, pid_ref,
 
     h = h_ref[...].astype(jnp.float32)                   # [Tb, D]
     w, _ = _w_block(h, ne_ref, lq_ref, nid_ref, pid_ref, lse_ref[...],
-                    num_neg=num_neg)
+                    num_neg=num_neg, ns_ref=ns_ref)
     gw = g_ref[...] * w                                  # [Tb, Mb]
     ne_acc[...] += jax.lax.dot_general(gw, h, (((0,), (0,)), ((), ())),
                                        preferred_element_type=jnp.float32)
@@ -237,36 +277,54 @@ def _bwd_dne_kernel(g_ref, h_ref, ne_ref, lq_ref, nid_ref, pid_ref,
 def sampled_ce_bwd(g: jax.Array, hidden: jax.Array, pos_emb: jax.Array,
                    neg_emb: jax.Array, log_q: jax.Array, neg_ids: jax.Array,
                    pos_ids: jax.Array, lse: jax.Array, *,
+                   pos_scale: jax.Array | None = None,
+                   neg_scale: jax.Array | None = None,
                    block_t: int = 256, block_m: int = 256,
                    interpret: bool = False, include_pos: bool = True,
                    num_neg: int | None = None):
     """Fused backward. g/lse [T]; others as sampled_ce.
     -> (dh [T,D], dpe [T,D], dne [M,D], dlq [M]) fp32.
     include_pos=False: lse is the PARTIAL lse and the pos terms vanish —
-    dpe is zeros; num_neg again overrides the global M."""
+    dpe is zeros; num_neg again overrides the global M.
+    Quantized mode (scales given): dh and the softmax-weight recompute use
+    dequantized rows; dpe/dne stay scale-unaware — they are the
+    straight-through master-table cotangents."""
     t, d = hidden.shape
     m = neg_emb.shape[0]
     num_neg = num_neg or m
     block_t, block_m = min(block_t, t), min(block_m, m)
+    quantized = neg_scale is not None
     hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids = _padded(
         hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, block_t, block_m)
     g2 = _pad_dim(g.astype(jnp.float32)[:, None], block_t)   # pad 0: padded
     lse2 = _pad_dim(lse[:, None], block_t)                   # rows contribute 0
     tp, mp = hidden.shape[0], neg_emb.shape[0]
+    if quantized:
+        if pos_scale is None:
+            pos_scale = jnp.ones((t, 1), jnp.float32)
+        ps2 = _pad_dim(pos_scale.astype(jnp.float32), block_t)
+        ns2 = _pad_dim(neg_scale.astype(jnp.float32), block_m)
+    dh_in_specs = [
+        pl.BlockSpec((block_t, 1), lambda it, im: (it, 0)),
+        pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
+        pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
+        pl.BlockSpec((block_m, d), lambda it, im: (im, 0)),
+        pl.BlockSpec((block_m,), lambda it, im: (im,)),
+        pl.BlockSpec((block_m,), lambda it, im: (im,)),
+        pl.BlockSpec((block_t,), lambda it, im: (it,)),
+        pl.BlockSpec((block_t, 1), lambda it, im: (it, 0)),
+    ]
+    dh_operands = [g2, hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids,
+                   lse2]
+    if quantized:
+        dh_in_specs += [pl.BlockSpec((block_t, 1), lambda it, im: (it, 0)),
+                        pl.BlockSpec((block_m, 1), lambda it, im: (im, 0))]
+        dh_operands += [ps2, ns2]
     dh, dpe = pl.pallas_call(
         functools.partial(_bwd_dh_kernel, num_neg=num_neg,
-                          include_pos=include_pos),
+                          include_pos=include_pos, quantized=quantized),
         grid=(tp // block_t, mp // block_m),
-        in_specs=[
-            pl.BlockSpec((block_t, 1), lambda it, im: (it, 0)),
-            pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
-            pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
-            pl.BlockSpec((block_m, d), lambda it, im: (im, 0)),
-            pl.BlockSpec((block_m,), lambda it, im: (im,)),
-            pl.BlockSpec((block_m,), lambda it, im: (im,)),
-            pl.BlockSpec((block_t,), lambda it, im: (it,)),
-            pl.BlockSpec((block_t, 1), lambda it, im: (it, 0)),
-        ],
+        in_specs=dh_in_specs,
         out_specs=[
             pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
             pl.BlockSpec((block_t, d), lambda it, im: (it, 0)),
@@ -277,19 +335,26 @@ def sampled_ce_bwd(g: jax.Array, hidden: jax.Array, pos_emb: jax.Array,
         ],
         scratch_shapes=[pltpu.VMEM((block_t, d), jnp.float32)],
         interpret=interpret,
-    )(g2, hidden, pos_emb, neg_emb, log_q, neg_ids, pos_ids, lse2)
+    )(*dh_operands)
+    dne_in_specs = [
+        pl.BlockSpec((block_t, 1), lambda im, it: (it, 0)),
+        pl.BlockSpec((block_t, d), lambda im, it: (it, 0)),
+        pl.BlockSpec((block_m, d), lambda im, it: (im, 0)),
+        pl.BlockSpec((block_m,), lambda im, it: (im,)),
+        pl.BlockSpec((block_m,), lambda im, it: (im,)),
+        pl.BlockSpec((block_t,), lambda im, it: (it,)),
+        pl.BlockSpec((block_t, 1), lambda im, it: (it, 0)),
+    ]
+    dne_operands = [g2, hidden, neg_emb, log_q, neg_ids, pos_ids, lse2]
+    if quantized:
+        dne_in_specs.append(
+            pl.BlockSpec((block_m, 1), lambda im, it: (im, 0)))
+        dne_operands.append(ns2)
     dne, dlq = pl.pallas_call(
-        functools.partial(_bwd_dne_kernel, num_neg=num_neg),
+        functools.partial(_bwd_dne_kernel, num_neg=num_neg,
+                          quantized=quantized),
         grid=(mp // block_m, tp // block_t),
-        in_specs=[
-            pl.BlockSpec((block_t, 1), lambda im, it: (it, 0)),
-            pl.BlockSpec((block_t, d), lambda im, it: (it, 0)),
-            pl.BlockSpec((block_m, d), lambda im, it: (im, 0)),
-            pl.BlockSpec((block_m,), lambda im, it: (im,)),
-            pl.BlockSpec((block_m,), lambda im, it: (im,)),
-            pl.BlockSpec((block_t,), lambda im, it: (it,)),
-            pl.BlockSpec((block_t, 1), lambda im, it: (it, 0)),
-        ],
+        in_specs=dne_in_specs,
         out_specs=[
             pl.BlockSpec((block_m, d), lambda im, it: (im, 0)),
             pl.BlockSpec((1, block_m), lambda im, it: (0, im)),
@@ -303,5 +368,5 @@ def sampled_ce_bwd(g: jax.Array, hidden: jax.Array, pos_emb: jax.Array,
             pltpu.VMEM((1, block_m), jnp.float32),
         ],
         interpret=interpret,
-    )(g2, hidden, neg_emb, log_q, neg_ids, pos_ids, lse2)
+    )(*dne_operands)
     return dh[:t], dpe[:t], dne[:m], dlq[0, :m]

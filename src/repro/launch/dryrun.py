@@ -157,7 +157,8 @@ def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
                proposal: str | None = None, fused_head: str = "auto",
                refresh_every: int | None = None,
                refresh_policy: str | None = None,
-               vocab_parallel: int = 1, vocab_size: int | None = None):
+               vocab_parallel: int = 1, vocab_size: int | None = None,
+               table_dtype: str | None = None):
     import dataclasses as _dc
     from repro.models import attention as attn_mod
     from repro.models import moe as moe_mod
@@ -171,6 +172,10 @@ def lower_cell(arch: str, shape: ShapeConfig, *, multi_pod: bool,
                                                  8 * vocab_parallel))
     if proposal is not None:
         cfg = cfg.with_head(proposal=proposal)
+    if table_dtype is not None:
+        # quantized hot path (DESIGN §12); unknown dtypes raise inside
+        # make_loss_fn at step-build time, surfaced as a cell failure
+        cfg = cfg.with_head(table_dtype=table_dtype)
     if refresh_every is not None:
         cfg = cfg.with_head(refresh_every=refresh_every)
     if refresh_policy is not None:
@@ -358,20 +363,23 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              moe_impl: str = "shard_map", pad_heads: bool = False,
              fused_head: str = "auto", refresh_every: int | None = None,
              refresh_policy: str | None = None,
-             vocab_parallel: int = 1, vocab_size: int | None = None) -> dict:
+             vocab_parallel: int = 1, vocab_size: int | None = None,
+             table_dtype: str | None = None) -> dict:
     shape = shape_by_name(shape_name)
     cfg, mesh, lowered, compiled, times = lower_cell(
         arch, shape, multi_pod=multi_pod, head_mode=head_mode,
         attn_impl=attn_impl, moe_impl=moe_impl, pad_heads=pad_heads,
         fused_head=fused_head, refresh_every=refresh_every,
         refresh_policy=refresh_policy, vocab_parallel=vocab_parallel,
-        vocab_size=vocab_size)
+        vocab_size=vocab_size, table_dtype=table_dtype)
     rec = analyze(cfg, mesh, lowered, compiled, shape=shape,
                   head_mode=head_mode)
     rec.update(times)
     if vocab_parallel > 1:
         rec["vocab_parallel"] = vocab_parallel
         rec["vocab_size"] = cfg.vocab_size
+    if table_dtype is not None:
+        rec["table_dtype"] = table_dtype
     if refresh_policy is not None and shape.kind == "train" \
             and head_mode == "midx" and vocab_parallel == 1:
         rec["refresh"] = lower_refresh_cell(cfg, mesh,
@@ -383,6 +391,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}__{head_mode}"
     if vocab_parallel > 1:
         tag += f"__vp{vocab_parallel}"
+    if table_dtype is not None:
+        tag += f"__{table_dtype}"
     with open(os.path.join(out_dir, tag + ".json"), "w") as f:
         json.dump(rec, f, indent=1)
     if save_hlo:
@@ -491,6 +501,10 @@ def main():
     ap.add_argument("--vocab-size", type=int, default=None,
                     help="override cfg.vocab_size for the lowered config "
                          "(e.g. 10000000 for the V=10M vocab-parallel cell)")
+    ap.add_argument("--table-dtype", default=None,
+                    help="class-table storage dtype on the head hot path "
+                         "(bf16/int8/fp8, DESIGN §12); unknown values raise "
+                         "at step-build time")
     args = ap.parse_args()
 
     archs = ([args.arch] if args.arch else
@@ -525,7 +539,8 @@ def main():
                                      refresh_every=args.refresh_every,
                                      refresh_policy=args.refresh_policy,
                                      vocab_parallel=args.vocab_parallel,
-                                     vocab_size=args.vocab_size)
+                                     vocab_size=args.vocab_size,
+                                     table_dtype=args.table_dtype)
                     except Exception as e:
                         failures.append((arch, shape.name, mp, hm, str(e)))
                         print(f"[dryrun] FAIL {arch} {shape.name} "

@@ -113,6 +113,11 @@ def main():
                          "the generic candidate-rescore head")
     ap.add_argument("--num-candidates", type=int, default=0,
                     help="MIDX decode candidates (0 = cfg.head default)")
+    ap.add_argument("--table-dtype", default=None,
+                    help="hot-path class-table format (bf16|int8|fp8, "
+                         "DESIGN §12): the two-stage draw reads quantized "
+                         "codebooks and the rescore reads PQ residual "
+                         "codes instead of [V,D] rows")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = cfg.head default)")
     ap.add_argument("--window", type=int, default=0)
@@ -141,6 +146,8 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     head_kw = {}
+    if args.table_dtype is not None:
+        head_kw["table_dtype"] = args.table_dtype
     if args.num_candidates:
         head_kw["decode_candidates"] = args.num_candidates
     if args.temperature:

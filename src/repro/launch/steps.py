@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.index.quantized import resolve_table_dtype, unwrap_index
 from repro.models import (decode_step, forward, heads, init_decode_state,
                           init_params, logits_full)
 from repro.optim import Optimizer, clip_by_global_norm
@@ -90,6 +91,9 @@ def make_loss_fn(cfg: ModelConfig, *, head_mode: Optional[str] = None,
     (make_train_step's returns_state path).
     """
     mode, proposal = resolve_proposal(cfg, head_mode)
+    # unknown table dtypes raise here — at step-build time — same
+    # convention as resolve_proposal for unknown head modes
+    resolve_table_dtype(cfg.head.table_dtype)
     include_aux = bool(with_aux and proposal is not None
                        and proposal.trainable)
 
@@ -589,8 +593,21 @@ def make_refresh_step(cfg: ModelConfig, mesh=None, *,
                                threshold=cfg.head.refresh_drift_threshold,
                                n_valid=n_valid)
 
-    return shard_map(body, mesh=mesh, in_specs=(P(), P(), P()),
-                     out_specs=(P(), P()), check_rep=False)
+    sharded_step = shard_map(body, mesh=mesh, in_specs=(P(), P(), P()),
+                             out_specs=(P(), P()), check_rep=False)
+    if resolve_table_dtype(cfg.head.table_dtype) == "bf16":
+        return sharded_step
+
+    def refresh_quantized(params, state, key):
+        # the sharded rebuild works on the bare index; the low-bit twins
+        # re-derive outside shard_map (elementwise per-row — cheap next to
+        # the refit, and the scales come out identical on every device)
+        new_index, metrics = sharded_step(params, unwrap_index(state), key)
+        table = class_embeddings(cfg, params).astype(jnp.float32)
+        return heads._requantized(cfg, state, new_index, table,
+                                  key), metrics
+
+    return refresh_quantized
 
 
 # ---------------------------------------------------------------------------
@@ -657,7 +674,9 @@ def abstract_vocab_index(cfg: ModelConfig, params_abs, vp: int):
     from repro.dist import vocab_parallel as vp_mod
 
     def build(params):
-        index = heads.init_head_state(cfg, params, jax.random.PRNGKey(0))
-        return vp_mod.shard_index(index, vp)
+        # quantized head states shard their bare MultiIndex — the vp loss
+        # quantizes each shard's row slice in-step (dist/vocab_parallel.py)
+        state = heads.init_head_state(cfg, params, jax.random.PRNGKey(0))
+        return vp_mod.shard_index(unwrap_index(state), vp)
 
     return jax.eval_shape(build, params_abs)

@@ -370,6 +370,12 @@ def main():
                          "cfg.head.use_fused_head gated on backend; on = "
                          "compiled kernels (TPU only); interpret = fused "
                          "graph via the Pallas interpreter (any backend)")
+    ap.add_argument("--table-dtype", default=None,
+                    help="class-table storage on the head hot path "
+                         "(DESIGN §12): bf16 = master precision (default), "
+                         "int8/fp8 = per-row-scaled low-bit table + "
+                         "quantized proposal codebooks + PQ-code residual "
+                         "rescore; unknown values raise at step-build time")
     ap.add_argument("--refresh-every", type=int, default=None,
                     help="steps between index refresh events "
                          "(default: cfg.head.refresh_every)")
@@ -394,6 +400,8 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.table_dtype is not None:
+        cfg = cfg.with_head(table_dtype=args.table_dtype)
     if args.vocab_parallel > 1:
         mesh = make_vocab_mesh(data=max(args.dp, 1),
                                vocab=args.vocab_parallel)

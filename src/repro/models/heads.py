@@ -14,6 +14,7 @@ heads: `midx_decode_head` (the O(K²+M·D) serving hot path) plus its generic
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
@@ -25,45 +26,81 @@ from repro.core import midx as midx_mod
 from repro.core.index import MultiIndex
 from repro.core.sampled_softmax import (full_softmax_loss,
                                         sampled_softmax_loss)
+from repro.index.quantized import (QuantHeadState, code_scores, dequant_rows,
+                                   quantize_head_state,
+                                   quantized_query_scores,
+                                   resolve_table_dtype, unwrap_index)
 from repro.kernels import dispatch as kd
-from repro.kernels.sampled_ce.ops import sampled_ce_op, sampled_ce_pt_op
+from repro.kernels.sampled_ce.ops import (sampled_ce_op, sampled_ce_pt_op,
+                                          sampled_ce_pt_q_op, sampled_ce_q_op)
 from repro.models.model import class_embeddings, logits_full
 
 
-def init_head_state(cfg: ModelConfig, params: dict, key: jax.Array) -> MultiIndex:
-    """Build the inverted multi-index over the class-embedding table."""
+def init_head_state(cfg: ModelConfig, params: dict, key: jax.Array):
+    """Build the inverted multi-index over the class-embedding table.
+
+    table_dtype='bf16' returns the bare MultiIndex (unchanged seed path);
+    'int8'/'fp8' wraps it in a QuantHeadState carrying the low-bit table,
+    quantized codebooks and residual PQ codes (DESIGN §12)."""
+    fmt = resolve_table_dtype(cfg.head.table_dtype)
     table = class_embeddings(cfg, params).astype(jnp.float32)
-    return index_mod.build(key, table, kind=cfg.head.quantizer,
-                           k=cfg.head.midx_k, iters=cfg.head.kmeans_iters,
-                           keep_residuals=False)
+    index = index_mod.build(key, table, kind=cfg.head.quantizer,
+                            k=cfg.head.midx_k, iters=cfg.head.kmeans_iters,
+                            keep_residuals=False)
+    if fmt == "bf16":
+        return index
+    return quantize_head_state(index, table, fmt,
+                               key=jax.random.fold_in(key, 1))
 
 
-def refresh_head_state(cfg: ModelConfig, params: dict, state: MultiIndex,
-                       key: jax.Array) -> MultiIndex:
+def _requantized(cfg: ModelConfig, state: QuantHeadState,
+                 new_index: MultiIndex, table: jax.Array,
+                 key: jax.Array) -> QuantHeadState:
+    """Rebuild the low-bit twins around a refreshed index. With
+    quantize_on_refresh=False only the index swaps — the low-bit copies stay
+    frozen at their previous values (an approximation knob; the CSR/member
+    draw still uses the fresh index)."""
+    if not cfg.head.quantize_on_refresh:
+        return dataclasses.replace(state, index=new_index)
+    rc = state.residual_codes
+    return quantize_head_state(new_index, table, state.fmt,
+                               key=jax.random.fold_in(key, 1),
+                               n_sub=rc.n_sub, ksub=rc.ksub)
+
+
+def refresh_head_state(cfg: ModelConfig, params: dict, state,
+                       key: jax.Array):
     """Full refit against the current class table (warm-started, DESIGN §8).
 
-    Back-compat entry point returning only the index; the lifecycle call
-    sites use `refresh_head_state_with_policy` for drift metrics and the
-    reassign-only escalation path."""
+    Back-compat entry point returning only the head state; the lifecycle
+    call sites use `refresh_head_state_with_policy` for drift metrics and
+    the reassign-only escalation path."""
     table = class_embeddings(cfg, params).astype(jnp.float32)
-    return index_mod.refresh(state, key, table, iters=cfg.head.kmeans_iters)
+    new_index = index_mod.refresh(unwrap_index(state), key, table,
+                                  iters=cfg.head.kmeans_iters)
+    if isinstance(state, QuantHeadState):
+        return _requantized(cfg, state, new_index, table, key)
+    return new_index
 
 
 def refresh_head_state_with_policy(cfg: ModelConfig, params: dict,
-                                   state: MultiIndex, key: jax.Array,
-                                   policy: Optional[str] = None
-                                   ) -> tuple[MultiIndex, dict]:
+                                   state, key: jax.Array,
+                                   policy: Optional[str] = None):
     """One refresh event under cfg.head.refresh_policy (or an override).
 
-    Returns (new_index, metrics) where metrics carries reassigned_frac /
+    Returns (new_state, metrics) where metrics carries reassigned_frac /
     codeword_drift / did_full / distortion — the step-log payload
-    (DESIGN §8)."""
+    (DESIGN §8). Quantized head states re-derive their low-bit twins here,
+    riding the same IndexLifecycle double buffer as the index itself."""
     from repro.index import lifecycle as lifecycle_mod
     table = class_embeddings(cfg, params).astype(jnp.float32)
-    return lifecycle_mod.refresh_with_policy(
-        state, key, table, iters=cfg.head.kmeans_iters,
+    new_index, metrics = lifecycle_mod.refresh_with_policy(
+        unwrap_index(state), key, table, iters=cfg.head.kmeans_iters,
         policy=policy or cfg.head.refresh_policy,
         threshold=cfg.head.refresh_drift_threshold)
+    if isinstance(state, QuantHeadState):
+        return _requantized(cfg, state, new_index, table, key), metrics
+    return new_index, metrics
 
 
 def loss_full(cfg: ModelConfig, params: dict, hidden: jax.Array,
@@ -95,7 +132,16 @@ def loss_midx(cfg: ModelConfig, params: dict, index: MultiIndex,
 
     `fused=None` defers to kernels.dispatch (backend-gated); `interpret`
     runs the kernels under the Pallas interpreter (CPU parity tests).
+
+    When `index` is a QuantHeadState (cfg.head.table_dtype int8/fp8), the
+    whole hot path goes low-bit (DESIGN §12): proposal scoring reads the
+    quantized codebooks (both fused and jnp, so draws match across
+    backends), the fused CE gathers int8/fp8 rows + per-row scales and
+    dequantizes in-register, and the unfused CE dequantizes through
+    `dequant_rows` so gradients land on the master table (STE).
     """
+    qs = index if isinstance(index, QuantHeadState) else None
+    index = unwrap_index(index)
     table = class_embeddings(cfg, params)
     m = cfg.head.num_negatives
     h32 = hidden.astype(jnp.float32)
@@ -107,41 +153,80 @@ def loss_midx(cfg: ModelConfig, params: dict, index: MultiIndex,
     proposal = cfg.head.proposal
     if proposal == "per_token":
         # two-stage form: O(K) Gumbels per draw instead of a K² table/token
-        tables_fn = (kd.midx_tables_fn(use_kernel=True, interpret=interpret)
-                     if use_fused else None)
+        if qs is not None:
+            tables_fn = kd.midx_tables_fn_q(
+                qs.qcb1, qs.qcb1_scale, qs.qcb2, qs.qcb2_scale,
+                use_kernel=use_fused, interpret=interpret)
+        else:
+            tables_fn = (kd.midx_tables_fn(use_kernel=True,
+                                           interpret=interpret)
+                         if use_fused else None)
         draw = midx_mod.sample_twostage(index, key, h32, m,
                                         tables_fn=tables_fn)  # ids [B,S,M]
         if use_fused:
-            loss = sampled_ce_pt_op(
-                h32.reshape(b * s, d), table,
-                draw.log_q.reshape(b * s, m), draw.ids.reshape(b * s, m),
-                labels.reshape(b * s), interpret).reshape(b, s)
+            if qs is not None:
+                loss = sampled_ce_pt_q_op(
+                    h32.reshape(b * s, d), table, qs.qdata, qs.qscale,
+                    draw.log_q.reshape(b * s, m), draw.ids.reshape(b * s, m),
+                    labels.reshape(b * s), interpret).reshape(b, s)
+            else:
+                loss = sampled_ce_pt_op(
+                    h32.reshape(b * s, d), table,
+                    draw.log_q.reshape(b * s, m), draw.ids.reshape(b * s, m),
+                    labels.reshape(b * s), interpret).reshape(b, s)
             return _masked_mean(loss, mask)
-        pos_logit = jnp.sum(h32 * table[labels].astype(jnp.float32), axis=-1)
-        neg_e = table[draw.ids].astype(jnp.float32)           # [B,S,M,D]
-        neg_logits = jnp.einsum("bsd,bsmd->bsm", h32, neg_e)
+        pos_e, neg_e = _gathered_rows(table, qs, labels, draw.ids)
+        pos_logit = jnp.sum(h32 * pos_e, axis=-1)
+        neg_logits = jnp.einsum("bsd,bsmd->bsm", h32, neg_e)  # [B,S,M]
         log_q, neg_ids = draw.log_q, draw.ids
     else:
         sampler = (midx_mod.sample_pooled if proposal == "pooled"
                    else midx_mod.sample_mixture)
-        draw = sampler(index, key, h32, m)                    # ids [B,M]
+        scores_fn = None
+        if qs is not None:
+            scores_fn = (lambda idx, z: quantized_query_scores(
+                idx.kind, qs.qcb1, qs.qcb1_scale, qs.qcb2, qs.qcb2_scale, z))
+        draw = sampler(index, key, h32, m, scores_fn=scores_fn)  # ids [B,M]
         if use_fused:
-            pos_emb = table[labels]                           # [B,S,D] native
-            neg_emb = table[draw.ids]                         # [B,M,D] native
-            loss = jax.vmap(
-                lambda hb, pe, ne, lq, ni, pi:
-                sampled_ce_op(hb, pe, ne, lq, ni, pi, interpret)
-            )(h32, pos_emb, neg_emb, draw.log_q, draw.ids, labels)
+            if qs is not None:
+                loss = jax.vmap(
+                    lambda hb, pe, ne, pq, ps, nq, ns, lq, ni, pi:
+                    sampled_ce_q_op(hb, pe, ne, pq, ps, nq, ns, lq, ni, pi,
+                                    interpret)
+                )(h32, table[labels], table[draw.ids],
+                  qs.qdata[labels], qs.qscale[labels],
+                  qs.qdata[draw.ids], qs.qscale[draw.ids],
+                  draw.log_q, draw.ids, labels)
+            else:
+                pos_emb = table[labels]                       # [B,S,D] native
+                neg_emb = table[draw.ids]                     # [B,M,D] native
+                loss = jax.vmap(
+                    lambda hb, pe, ne, lq, ni, pi:
+                    sampled_ce_op(hb, pe, ne, lq, ni, pi, interpret)
+                )(h32, pos_emb, neg_emb, draw.log_q, draw.ids, labels)
             return _masked_mean(loss, mask)
-        pos_logit = jnp.sum(h32 * table[labels].astype(jnp.float32), axis=-1)
-        neg_e = table[draw.ids].astype(jnp.float32)           # [B,M,D]
-        neg_logits = jnp.einsum("bsd,bmd->bsm", h32, neg_e)
+        pos_e, neg_e = _gathered_rows(table, qs, labels, draw.ids)
+        pos_logit = jnp.sum(h32 * pos_e, axis=-1)
+        neg_logits = jnp.einsum("bsd,bmd->bsm", h32, neg_e)   # [B,S,M]
         log_q = draw.log_q[:, None, :]                        # broadcast over S
         neg_ids = draw.ids[:, None, :]
 
     loss = sampled_softmax_loss(pos_logit, neg_logits, log_q, neg_ids, labels,
                                 cfg.head.mask_collisions)
     return _masked_mean(loss, mask)
+
+
+def _gathered_rows(table: jax.Array, qs: Optional[QuantHeadState],
+                   labels: jax.Array, neg_ids: jax.Array):
+    """fp32 (pos_rows, neg_rows) for the unfused CE — quantized states
+    dequantize per gathered row with master-table STE gradients; bf16
+    states cast per gathered row (never the whole [V,D] table)."""
+    if qs is not None:
+        pos_e = dequant_rows(table, qs.qdata, qs.qscale, labels)
+        neg_e = dequant_rows(table, qs.qdata, qs.qscale, neg_ids)
+        return pos_e, neg_e
+    return (table[labels].astype(jnp.float32),
+            table[neg_ids].astype(jnp.float32))
 
 
 def _masked_mean(loss: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
@@ -246,23 +331,42 @@ def midx_decode_head(cfg: ModelConfig, params: dict, index: MultiIndex,
     `num_candidates` / `temperature` default to
     `cfg.head.decode_candidates` / `cfg.head.decode_temperature` — the knobs
     the serve CLI plumbs through (DESIGN §5).
+
+    With a QuantHeadState the rescore never touches [V,D] rows at all: the
+    candidate score is reassembled from the stage tables already computed
+    for the draw plus the PQ residual codes (Theorem-1 identity
+    o_i = s1[k1(i)] + s2[k2(i)] + z·r_i), reading 2 assignment ints and
+    n_sub code bytes per candidate instead of D floats (DESIGN §12).
     """
     if num_candidates is None:
         num_candidates = cfg.head.decode_candidates
     if temperature is None:
         temperature = cfg.head.decode_temperature
+    qs = index if isinstance(index, QuantHeadState) else None
+    index = unwrap_index(index)
     table = class_embeddings(cfg, params)
     h = hidden.astype(jnp.float32)
     k_draw, k_pick = jax.random.split(key)
     interpret = interpret or kd.interpret_default()
-    tables_fn = (kd.midx_tables_fn(use_kernel=True, interpret=interpret)
-                 if kd.fused_head_active(cfg.head, fused=fused,
-                                         interpret=interpret) else None)
-    draw = midx_mod.sample_twostage(index, k_draw, h, num_candidates,
-                                    tables_fn=tables_fn)       # [B,M]
-    # cast per gathered row — never the whole [V, D] table (DESIGN §3)
-    cand_e = table[draw.ids].astype(jnp.float32)              # [B,M,D]
-    logits = jnp.einsum("bd,bmd->bm", h, cand_e) / temperature
+    use_fused = kd.fused_head_active(cfg.head, fused=fused,
+                                    interpret=interpret)
+    if qs is not None:
+        tables_fn = kd.midx_tables_fn_q(
+            qs.qcb1, qs.qcb1_scale, qs.qcb2, qs.qcb2_scale,
+            use_kernel=use_fused, interpret=interpret)
+        draw, (s1, s2, _, _) = midx_mod.sample_twostage(
+            index, k_draw, h, num_candidates, tables_fn=tables_fn,
+            return_tables=True)                                # [B,M]
+        scores = code_scores(index, qs.residual_codes, h, draw.ids, s1, s2)
+        logits = scores / temperature
+    else:
+        tables_fn = (kd.midx_tables_fn(use_kernel=True, interpret=interpret)
+                     if use_fused else None)
+        draw = midx_mod.sample_twostage(index, k_draw, h, num_candidates,
+                                        tables_fn=tables_fn)   # [B,M]
+        # cast per gathered row — never the whole [V, D] table (DESIGN §3)
+        cand_e = table[draw.ids].astype(jnp.float32)          # [B,M,D]
+        logits = jnp.einsum("bd,bmd->bm", h, cand_e) / temperature
     corrected = logits - draw.log_q                           # IS-corrected
     pick = jax.random.categorical(k_pick, corrected, axis=-1) # [B]
     token = jnp.take_along_axis(draw.ids, pick[:, None], axis=-1)[:, 0]

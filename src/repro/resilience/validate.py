@@ -19,6 +19,7 @@ import jax
 import numpy as np
 
 from repro.index.build import MultiIndex
+from repro.index.quantized import QuantHeadState
 
 
 def _np(x) -> np.ndarray:
@@ -118,6 +119,24 @@ def validate_state(state: Any, like: Any = None,
             return reasons          # structure is broken; leaf checks moot
     if isinstance(state, MultiIndex):
         reasons += validate_index(state, expect_classes)
+    elif isinstance(state, QuantHeadState):
+        reasons += validate_index(state.index, expect_classes)
+        reasons += _validate_quant(state)
     else:
         reasons += _validate_generic(state)
+    return reasons
+
+
+def _validate_quant(state: QuantHeadState) -> list[str]:
+    """Quantized-head extras on top of the nested index's CSR invariants:
+    per-row scales must be finite and strictly positive (a zero/NaN scale
+    silently zeroes every logit touching that row), and the residual
+    sub-codebooks NaN-free."""
+    reasons = []
+    for name in ("qscale", "qcb1_scale", "qcb2_scale"):
+        arr = _np(getattr(state, name))
+        if arr.size and (not np.all(np.isfinite(arr)) or np.any(arr <= 0)):
+            reasons.append(f"{name} has non-finite or non-positive scales")
+    if not np.all(np.isfinite(_np(state.sub_codebooks))):
+        reasons.append("sub_codebooks have non-finite entries")
     return reasons
