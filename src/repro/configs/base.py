@@ -84,12 +84,23 @@ class ServeConfig:
     shared pool of `num_pages` physical KV pages (0 → full residency:
     every slot can hold max_seq tokens simultaneously, plus the reserved
     trash page).
+
+    DESIGN §13 knobs: `spec_decode` turns on MIDX-draft speculative decoding
+    (k draft tokens per slot per wave, one batched full-head verify pass;
+    0 = off), `prefill_chunk` bounds prefill work per engine wave (prompts
+    prefill in page-aligned chunks of at most this many tokens, interleaved
+    with decode waves; 0 = whole-prompt batched prefill), and `prefix_cache`
+    enables the refcounted prompt-prefix page cache (requires a chunked
+    prefill budget so a cache-hit prompt can resume mid-prompt).
     """
     max_slots: int = 8
     page_size: int = 16
     max_seq: int = 256            # logical per-slot capacity (prompt + gen)
     num_pages: int = 0            # 0 -> max_slots * pages_per_slot + 1
     max_queue: int = 0            # bounded intake queue; 0 -> unbounded
+    spec_decode: int = 0          # draft tokens per wave; 0 -> non-speculative
+    prefill_chunk: int = 0        # prefill-token budget per wave; 0 -> batched
+    prefix_cache: bool = False    # share prompt-prefix pages across requests
 
     @property
     def pages_per_slot(self) -> int:

@@ -38,7 +38,10 @@ class ZipfLM:
             m = token_cluster == k
             w = zipf * m
             if w.sum() == 0:
-                w = m.astype(float)
+                # cluster with no assigned tokens (small vocab / many
+                # clusters): fall back to the global marginal so the row
+                # stays stochastic instead of dividing to NaN
+                w = m.astype(float) if m.any() else zipf.copy()
             within[k] = w / w.sum()
         return token_cluster, trans, within, zipf / zipf.sum()
 

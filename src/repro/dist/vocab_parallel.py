@@ -112,6 +112,25 @@ def shard_index(index: MultiIndex, num_shards: int) -> VocabShardedIndex:
                              counts, log_counts)
 
 
+def unshard_index(sharded: VocabShardedIndex) -> MultiIndex:
+    """Merge the vocab-sharded layout back into one replicated MultiIndex —
+    the exact inverse of `shard_index` (pure re-layout, bit-identical
+    assignments/codebooks, global CSR rebuilt from the concatenated
+    assignments). This is the serving-export path: `serve.Engine` consumes
+    the replicated layout, so a vocab-parallel training run unshards its
+    final index before `save_serving_state` (DESIGN §9/§13). Residuals are
+    not kept by the sharded layout, so the merged index has none (the
+    serving head's proposal+rescore path never reads them)."""
+    a1 = sharded.assign1.reshape(-1)
+    a2 = sharded.assign2.reshape(-1)
+    k = sharded.num_codewords
+    sorted_ids, offsets, counts, log_counts = _csr_from_assignments(a1, a2, k)
+    d = sharded.codebook1.shape[-1]
+    return MultiIndex(sharded.kind, sharded.codebook1, sharded.codebook2,
+                      a1, a2, jnp.zeros((0, d), jnp.float32),
+                      sorted_ids, offsets, counts, log_counts)
+
+
 def local_index(sharded: VocabShardedIndex) -> MultiIndex:
     """Inside shard_map: squeeze the [1, ...] shard dim into a local
     MultiIndex view (counts/log_counts are this shard's partial counts)."""

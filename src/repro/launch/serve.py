@@ -13,9 +13,18 @@ wall-clock, independent of completions. Reports tokens/s and p50/p95/p99
 per-token latency, and verifies --verify requests against a solo replay
 (batched output must be identical to running the request alone).
 
+Serving-tier extras (DESIGN §13):
+  --spec-decode K   MIDX-draft speculative decoding (K drafts per wave, one
+                    batched full-head verify; reports the acceptance rate)
+  --prefix-cache    refcounted prompt-prefix page sharing (+ chunked prefill)
+  --prefill-chunk N page-aligned prefill chunks interleaved with decode
+  --replicas N      N engine replicas behind the load-weighted router
+  --greedy          temperature-0 decoding (with --spec-decode: greedy
+                    verify, token-identical to full-head greedy decode)
+
 CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --traffic synthetic \
-      --requests 16 --max-slots 4 --head midx
+      --requests 16 --max-slots 4 --head midx --spec-decode 4 --replicas 2
 """
 from __future__ import annotations
 
@@ -28,7 +37,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import pad_to
-from repro.serve import Engine, Request
+from repro.serve import Engine, Request, Router
 
 
 def proposal_kl(cfg, params, index, key, probes: int = 16) -> float:
@@ -76,17 +85,31 @@ def _make_request(cfg, rng, *, rid: int, plen: int, max_new: int, seed: int,
 
 
 def synthetic_requests(cfg, *, num: int, prompt: int, max_new: int,
-                       rate: float, seed: int) -> list[Request]:
+                       rate: float, seed: int,
+                       shared_prefix: float = 0.0) -> list[Request]:
     """Open-loop synthetic traffic: mixed prompt lengths from a small bucket
-    set (bounded prefill compile count), Poisson arrivals at `rate` req/s."""
+    set (bounded prefill compile count), Poisson arrivals at `rate` req/s.
+
+    `shared_prefix` in (0, 1]: that fraction of requests spells the same
+    page-aligned common prefix over the first ~half of the prompt (a shared
+    system prompt) — the multi-tenant mix the prefix cache deduplicates."""
     rng = np.random.default_rng(seed)
     buckets = prompt_buckets(prompt)
     arrivals = (np.cumsum(rng.exponential(1.0 / rate, size=num))
                 if rate > 0 else np.zeros(num))
-    return [_make_request(cfg, rng, rid=i, plen=int(rng.choice(buckets)),
-                          max_new=max_new, seed=seed,
-                          arrival=float(arrivals[i]))
-            for i in range(num)]
+    reqs = []
+    pfx_len = max(cfg.serve.page_size, (prompt // 2)
+                  // cfg.serve.page_size * cfg.serve.page_size)
+    prefix = rng.integers(0, cfg.vocab_size, size=pfx_len).astype(np.int32)
+    for i in range(num):
+        plen = int(rng.choice(buckets))
+        r = _make_request(cfg, rng, rid=i, plen=plen, max_new=max_new,
+                          seed=seed, arrival=float(arrivals[i]))
+        if shared_prefix > 0 and rng.random() < shared_prefix \
+                and len(r.tokens) > pfx_len:
+            r.tokens[:pfx_len] = prefix
+        reqs.append(r)
+    return reqs
 
 
 def main():
@@ -120,6 +143,26 @@ def main():
                          "codes instead of [V,D] rows")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = cfg.head default)")
+    ap.add_argument("--greedy", action="store_true",
+                    help="temperature-0 decoding; with --spec-decode the "
+                         "greedy verify is token-identical to full-head "
+                         "greedy decode (needs --head full or --spec-decode)")
+    ap.add_argument("--spec-decode", type=int, default=0,
+                    help="speculative decoding: K MIDX drafts per wave, one "
+                         "batched full-head verify (0 = off; DESIGN §13)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prefill-token budget per wave: prompts prefill in "
+                         "page-aligned chunks interleaved with decode waves "
+                         "(0 = whole-prompt batched prefill; DESIGN §13)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV pages across requests via "
+                         "the refcounted prefix trie (DESIGN §13)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the load-weighted router "
+                         "(DESIGN §13); replicas share params + index")
+    ap.add_argument("--shared-prefix", type=float, default=0.0,
+                    help="fraction of requests whose prompt starts with a "
+                         "common prefix (exercises --prefix-cache)")
     ap.add_argument("--window", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None,
@@ -152,12 +195,19 @@ def main():
         head_kw["decode_candidates"] = args.num_candidates
     if args.temperature:
         head_kw["decode_temperature"] = args.temperature
+    if args.greedy:
+        head_kw["decode_temperature"] = 0.0
     if head_kw:
         cfg = cfg.with_head(**head_kw)
-    max_seq = args.max_seq or pad_to(args.prompt + args.tokens + 1,
-                                     args.page_size)
+    # speculative waves write up to spec_decode-1 scratch positions past the
+    # committed token, so the auto-fit per-slot budget covers them too
+    max_seq = args.max_seq or pad_to(
+        args.prompt + args.tokens + max(args.spec_decode, 1), args.page_size)
     cfg = cfg.with_serve(max_slots=args.max_slots, page_size=args.page_size,
-                         max_seq=max_seq, num_pages=args.num_pages)
+                         max_seq=max_seq, num_pages=args.num_pages,
+                         spec_decode=args.spec_decode,
+                         prefill_chunk=args.prefill_chunk,
+                         prefix_cache=args.prefix_cache)
     window = args.window or None
 
     if args.ckpt:
@@ -166,16 +216,23 @@ def main():
     else:
         engine = Engine(cfg, init_key=jax.random.PRNGKey(args.seed),
                         head=args.head, window=window)
+    replicas = [engine]
+    for _ in range(1, max(args.replicas, 1)):
+        replicas.append(Engine(cfg, engine.params, index=engine.index,
+                               head=args.head, window=window))
+    router = Router(replicas) if len(replicas) > 1 else None
 
     reqs = synthetic_requests(cfg, num=args.requests, prompt=args.prompt,
                               max_new=args.tokens, rate=args.rate,
-                              seed=args.seed)
+                              seed=args.seed,
+                              shared_prefix=args.shared_prefix)
     if not reqs:
         print("[serve] no requests to run")
         return
     if args.warmup:
         # reported percentiles then describe steady-state serving
-        engine.warmup(prompt_buckets(args.prompt))
+        for eng in replicas:
+            eng.warmup(prompt_buckets(args.prompt))
     if args.head == "full" and (args.swap_step >= 0 or args.stale_sigma > 0):
         raise SystemExit("--swap-step/--stale-sigma exercise the MIDX index "
                          "lifecycle; --head full has no index to swap")
@@ -193,17 +250,43 @@ def main():
             print(f"[serve] proposal KL(softmax‖Q): stale={kl_stale:.4f} "
                   f"refreshed={kl_fresh:.4f} (gap the swap closes: "
                   f"{kl_stale - kl_fresh:.4f})")
-            engine.swap_index(stale)
+            for eng in replicas:
+                eng.swap_index(stale)
         if args.swap_step >= 0:
-            engine.schedule_swap(fresh, at_step=args.swap_step)
+            for eng in replicas:
+                eng.schedule_swap(fresh, at_step=args.swap_step)
             print(f"[serve] index hot-swap scheduled before decode step "
                   f"{args.swap_step}")
-    results = engine.run(reqs)
-    s = engine.stats.summary()
+    if router is not None:
+        results = router.run(reqs)
+        s = router.summary()
+    else:
+        results = engine.run(reqs)
+        s = engine.stats.summary()
     print(f"[serve] head={args.head} arch={cfg.name} requests={args.requests} "
-          f"slots={args.max_slots} waves={s['waves']} generated={s['generated']} "
+          f"slots={args.max_slots} replicas={len(replicas)} "
+          f"waves={s['waves']} generated={s['generated']} "
           f"tok/s={s['tok_s']} p50={s['p50_ms']}ms p95={s['p95_ms']}ms "
           f"p99={s['p99_ms']}ms")
+    if args.spec_decode:
+        stats = router.stats() if router is not None else engine.stats
+        print(f"[serve] speculative: k={args.spec_decode} "
+              f"waves={stats.spec_waves} drafted={stats.spec_drafted} "
+              f"accepted={stats.spec_accepted} "
+              f"acceptance={stats.accept_rate():.3f}")
+    if args.prefix_cache:
+        counters = {}
+        for eng in replicas:
+            for k, v in eng.cache.counters().items():
+                counters[k] = counters.get(k, 0) + v
+        hits, misses = counters["cache_hits"], counters["cache_misses"]
+        rate = hits / max(hits + misses, 1)
+        print(f"[serve] prefix cache: hits={hits} misses={misses} "
+              f"hit_rate={rate:.3f} evictions={counters['cache_evictions']} "
+              f"cached_pages={counters['cached_pages']}")
+    if router is not None:
+        print(f"[serve] router: routed_per_replica="
+              f"{router.rstats.per_replica} shed={router.rstats.shed}")
     if s["waves"] < 2 and args.requests > args.max_slots:
         print("[serve] WARNING: expected >=2 admission waves", file=sys.stderr)
 
@@ -215,6 +298,8 @@ def main():
     if n_verify:
         bad = 0
         for r in reqs[:n_verify]:
+            if results[r.rid].status != "ok":
+                continue
             solo = engine.replay_single(r)
             if not np.array_equal(results[r.rid].tokens, solo):
                 bad += 1

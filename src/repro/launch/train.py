@@ -331,10 +331,17 @@ def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
         # serving export: {"params","index"} only (no opt state) — what
         # `serve.Engine.from_checkpoint` restores (DESIGN §5). The serving
         # stack consumes the replicated index layout, so a vocab-parallel
-        # run skips the export (decode-side vocab parallelism is future work)
-        if vp == 1:
-            save_serving_state(os.path.join(ckpt_dir, "serve"), steps, params,
-                               index, metadata={"arch": cfg.name})
+        # run first merges its sharded index (pure re-layout, bit-identical
+        # assignments) and gathers params to host before the export
+        if vp > 1:
+            from repro.dist.vocab_parallel import unshard_index
+            export_index = jax.device_get(unshard_index(index))
+            export_params = jax.tree_util.tree_map(jax.device_get, params)
+        else:
+            export_index, export_params = index, params
+        save_serving_state(os.path.join(ckpt_dir, "serve"), steps,
+                           export_params, export_index,
+                           metadata={"arch": cfg.name})
     return params, opt_state, index, history
 
 

@@ -537,6 +537,85 @@ def paged_decode_step(cfg: ModelConfig, params: dict, token: jax.Array, pos,
     return hidden, out
 
 
+def chunk_prefill_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                       start, length, state: dict, *,
+                       window: Optional[int] = None):
+    """Prefill one page-aligned chunk per slot against the paged layout
+    (DESIGN §13). tokens [B, C]; start [B] absolute position of tokens[:, 0];
+    length [B] valid token count this wave (0 = slot idle; its row is
+    masked end to end). Returns (hidden [B, C, D] final-normed, new state).
+
+    Every chunk runs at a fixed [B, C] shape: queries carry their absolute
+    positions (RoPE + causal mask), keys are written into the gathered page
+    view before attention so the chunk attends to the full cached prefix
+    plus itself, and only valid (slot, position) rows scatter back into the
+    pool — invalid rows land on the trash page. Masked score entries
+    contribute exact zeros, so a position's arithmetic depends only on the
+    tokens at and before it, never on the chunk grid offset or on which
+    physical pages back the prefix: a cache-hit resume is bitwise identical
+    to the same chunks run cold. Attention-KV families only (dense/moe):
+    ssm/hybrid carry sequential state that cannot resume mid-prompt, and
+    vlm/audio prefill through the batched path.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"chunked prefill supports dense/moe families, "
+                         f"not {cfg.family}")
+    b, c = tokens.shape
+    dtype = _cache_dtype(cfg)
+    hd = cfg.resolved_head_dim
+    kvh = cfg.num_kv_heads
+    g = cfg.num_heads // kvh
+    start = _pos_vec(start, b)
+    length = _pos_vec(length, b)
+    positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)   # [B, C]
+    valid = jnp.arange(c)[None, :] < length[:, None]              # [B, C]
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    pt = state["page_table"]
+    pool_k, pool_v = state["k"], state["v"]
+    l, _, page, _, _ = pool_k.shape
+    npages = pt.shape[1]
+    rows = jnp.arange(b)
+
+    def view(pool):
+        return pool[:, pt].reshape(l, b, npages * page, kvh, hd)
+
+    smax = npages * page
+    j = jnp.arange(smax)
+    ok = j[None, None, :] <= positions[:, :, None]                # [B, C, Smax]
+    if window is not None:
+        ok &= j[None, None, :] > positions[:, :, None] - window
+
+    x = params["embed"][tokens].astype(dtype)                     # [B, C, D]
+
+    def body(x, inp):
+        bp, kc, vc = inp
+        h = apply_norm(bp["ln1"], x, eps=cfg.norm_eps, kind=cfg.norm)
+        q, k, v = attn_mod.project_qkv(bp["attn"], h, cfg.num_heads, kvh, hd,
+                                       cos, sin, cfg.qk_norm, cfg.norm_eps)
+        kc = kc.at[rows[:, None], positions].set(k.astype(kc.dtype))
+        vc = vc.at[rows[:, None], positions].set(v.astype(vc.dtype))
+        qg = q.reshape(b, c, kvh, g, hd).astype(jnp.float32) * hd ** -0.5
+        scores = jnp.einsum("bqkgh,bmkh->bkgqm", qg, kc.astype(jnp.float32))
+        scores = jnp.where(ok[:, None, None, :, :], scores, attn_mod.NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bkgqm,bmkh->bqkgh", probs.astype(vc.dtype), vc)
+        x = x + o.reshape(b, c, -1) @ bp["attn"]["wo"].astype(x.dtype)
+        x, _ = model_mod._apply_ffn_part(cfg, bp, x)
+        return x, (k.astype(dtype), v.astype(dtype))
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"], view(pool_k), view(pool_v)))
+    x = apply_norm(params["final_norm"], x, eps=cfg.norm_eps, kind=cfg.norm)
+
+    phys = jnp.where(valid, pt[rows[:, None], positions // page], 0)
+    off = jnp.where(valid, positions % page, 0)
+    phys, off = phys.reshape(-1), off.reshape(-1)
+    out = {n: s for n, s in state.items() if n not in ("k", "v")}
+    out["k"] = pool_k.at[:, phys, off].set(ks.reshape(l, b * c, kvh, hd))
+    out["v"] = pool_v.at[:, phys, off].set(vs.reshape(l, b * c, kvh, hd))
+    return x, out
+
+
 def reset_slot(state: dict, slot) -> dict:
     """Clear slot `slot`'s per-slot cache entries so a recycled serving slot
     cannot leak the previous request's state (DESIGN §5). Paged K/V pages are

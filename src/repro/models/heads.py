@@ -374,6 +374,167 @@ def midx_decode_head(cfg: ModelConfig, params: dict, index: MultiIndex,
     return MidxDecodeOut(token, lq)
 
 
+def _spec_tables_fn(cfg: ModelConfig, qs: Optional[QuantHeadState],
+                    fused: Optional[bool], interpret: bool):
+    """The same stage-table hook selection as midx_decode_head, so the
+    speculative draft draws from exactly the distribution the serving head
+    samples (quantized codebooks included, DESIGN §12)."""
+    interpret = interpret or kd.interpret_default()
+    use_fused = kd.fused_head_active(cfg.head, fused=fused,
+                                    interpret=interpret)
+    if qs is not None:
+        return kd.midx_tables_fn_q(
+            qs.qcb1, qs.qcb1_scale, qs.qcb2, qs.qcb2_scale,
+            use_kernel=use_fused, interpret=interpret)
+    return (kd.midx_tables_fn(use_kernel=True, interpret=interpret)
+            if use_fused else None)
+
+
+class SpecDraftOut(NamedTuple):
+    tokens: jax.Array     # [B, k] draft tokens, i.i.d. ~ q(·|h)
+    log_q: jax.Array      # [B, k] their proposal log-probs
+    s1: jax.Array         # [B, K] stage-1 scores (shared by the k drafts)
+    s2: jax.Array         # [B, K] stage-2 scores
+    lse: jax.Array        # [B]    Eq.(6) normalizer
+
+
+def midx_spec_draft(cfg: ModelConfig, params: dict, index,
+                    hidden: jax.Array, keys: jax.Array, k: int = 1, *,
+                    fused: Optional[bool] = None,
+                    interpret: bool = False) -> SpecDraftOut:
+    """k MIDX draft tokens per row for speculative decoding (DESIGN §13).
+
+    The whole wave drafts from ONE hidden per slot — the backbone state that
+    predicted the slot's last committed token — so drafting costs a single
+    two-stage table build + k O(K) categorical draws and runs NO backbone
+    steps at all; the backbone touches the drafts exactly once, in the
+    batched verify pass. The draws are i.i.d. given `hidden`: q is one
+    position stale past the first draft, which costs acceptance, not
+    correctness — rejection sampling only needs the verifier to score the
+    drafts under the same q they were drawn from, and per-class
+    q(i|h) = exp(s1[a1(i)] + s2[a2(i)] − lse) is exactly how
+    `sample_twostage` normalizes its `log_q`. The stage tables come back so
+    the verify pass can reconstruct log q over the *whole* vocab from two
+    assignment gathers.
+
+    hidden [B, D]; keys [B, 2] per-slot PRNG keys (vmapped: a slot's draws
+    never depend on batch composition).
+    """
+    qs = index if isinstance(index, QuantHeadState) else None
+    index = unwrap_index(index)
+    tables_fn = _spec_tables_fn(cfg, qs, fused, interpret)
+
+    def one(h, key):
+        draw, (s1, s2, _, lse) = midx_mod.sample_twostage(
+            index, key, h[None], k, tables_fn=tables_fn, return_tables=True)
+        return draw.ids[0], draw.log_q[0], s1[0], s2[0], lse[0]
+
+    ids, lq, s1, s2, lse = jax.vmap(one)(hidden.astype(jnp.float32), keys)
+    return SpecDraftOut(ids, lq, s1, s2, lse)
+
+
+class SpecVerifyOut(NamedTuple):
+    tokens: jax.Array     # [k, B] committed-token matrix (rows < n_commit)
+    n_commit: jax.Array   # [B] tokens to commit this wave (1..k)
+    n_accept: jax.Array   # [B] accepted drafts (acceptance-rate numerator)
+
+
+def spec_verify(cfg: ModelConfig, params: dict, index, hiddens: jax.Array,
+                drafts: jax.Array, log_q: jax.Array, s1: jax.Array,
+                s2: jax.Array, lse: jax.Array, keys: jax.Array,
+                temperature: Optional[float] = None) -> SpecVerifyOut:
+    """Batched full-head verification of k MIDX drafts per slot (DESIGN §13).
+
+    hiddens [k,B,D] are the backbone states at the drafted positions — the
+    one chunked backbone pass of the wave; drafts/log_q [k,B] from
+    `midx_spec_draft`; s1/s2 [B,K] + lse [B] its per-slot stage tables
+    (shared by all k positions: the wave drafts from one hidden per slot);
+    keys [B,2] per-slot wave keys (roles are salted inside, so every random
+    number a slot consumes derives from its own stream — batch composition
+    never changes a request's output).
+
+    One `logits_full` matmul over all k·B rows gives the exact target
+    p(·|h_j) = softmax(logits[:V]/T). Leviathan-style rejection sampling:
+    accept draft d_j with prob min(1, p(d_j)/q(d_j)); on first rejection
+    emit a residual token ~ max(p−q, 0)/Z and stop. The committed prefix is
+    distributed exactly as sequential sampling from p — the proposal q may
+    condition on anything already decided (here: the previous wave's
+    hidden), it only has to be the distribution the drafts were actually
+    drawn from. The q-mass the index proposal leaks onto padded vocab rows
+    is handled too: p=0 there ⇒ a padded draft always rejects, and the leak
+    only feeds the residual's Z.
+    temperature <= 0 is greedy verify: accept iff the draft equals argmax,
+    else commit the argmax — token-identical to greedy full-head decoding.
+    """
+    if temperature is None:
+        temperature = cfg.head.decode_temperature
+    index = unwrap_index(index)
+    v = cfg.vocab_size
+    k, b = drafts.shape
+    logits = logits_full(cfg, params, hiddens)[..., :v].astype(jnp.float32)
+
+    if temperature > 0:
+        # accept tests need only scalars: the drafted token's target logit
+        # and the row normalizer — never a materialized [k,B,V] softmax
+        scaled = logits / temperature
+        lse_p = jax.nn.logsumexp(scaled, axis=-1)                # [k,B]
+        dc = jnp.minimum(drafts, v - 1)[..., None]
+        logp_d = jnp.take_along_axis(scaled, dc, axis=-1)[..., 0] - lse_p
+        logp_d = jnp.where(drafts < v, logp_d, -jnp.inf)
+        u = jax.vmap(lambda wk: jax.random.uniform(
+            jax.random.fold_in(wk, 2), (k,)))(keys).T            # [k,B]
+        accept = jnp.log(u) < logp_d - log_q
+        ok = jnp.cumprod(accept.astype(jnp.int32), axis=0).astype(bool)
+        n_acc = jnp.sum(ok, axis=0).astype(jnp.int32)            # [B]
+        # the correction token is consumed only at the FIRST rejected
+        # position j* = n_acc, so all vocab-wide work — the residual and
+        # the gumbel draw — happens on one [B, V] slice instead of
+        # [k, B, V] (the threefry bits for a vocab-wide categorical
+        # dominate verify cost on CPU)
+        jstar = jnp.minimum(n_acc, k - 1)                        # [B]
+        sel = lambda x: jnp.take_along_axis(
+            x, jstar[None, :].reshape((1, b) + (1,) * (x.ndim - 2)),
+            axis=0)[0]
+        logp_row = sel(scaled) - sel(lse_p[..., None])           # [B,V]
+        # draft log-prob over the whole vocab from the stage tables: two
+        # assignment gathers instead of a second scoring pass — and the
+        # tables are per-slot (not per-position), so no j* selection
+        logq_row = (jnp.take(s1, index.assign1[:v], axis=-1)
+                    + jnp.take(s2, index.assign2[:v], axis=-1)
+                    - lse[..., None])                            # [B,V]
+        resid = jnp.maximum(jnp.exp(logp_row) - jnp.exp(logq_row), 0.0)
+        rlog = jnp.log(resid)                                    # -inf at 0
+        has = jnp.sum(resid, axis=-1) > 0                        # [B]
+
+        def corr_slot(wk, j, rl, lp, hs):
+            kj = jax.random.fold_in(jax.random.fold_in(wk, 3), j)
+            # one gumbel vector serves both draws: only one branch is
+            # consumed, and conditioned on `hs` the noise is independent
+            # of which — argmax(logits + gumbel) IS categorical(logits)
+            g = -jnp.log(-jnp.log(
+                jax.random.uniform(kj, (v,), minval=jnp.finfo(jnp.float32).tiny)))
+            c_r = jnp.argmax(rl + g)
+            # float-degenerate residual (p <= q everywhere): fall back
+            # to the exact target — this branch has probability ~0
+            c_f = jnp.argmax(lp + g)
+            return jnp.where(hs, c_r, c_f).astype(jnp.int32)
+
+        corr = jax.vmap(corr_slot)(keys, jstar, rlog, logp_row, has)  # [B]
+    else:
+        best = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # [k,B]
+        accept = drafts == best
+        ok = jnp.cumprod(accept.astype(jnp.int32), axis=0).astype(bool)
+        n_acc = jnp.sum(ok, axis=0).astype(jnp.int32)            # [B]
+        corr = jnp.take_along_axis(
+            best, jnp.minimum(n_acc, k - 1)[None, :], axis=0)[0]  # [B]
+
+    jrow = jnp.arange(k)[:, None]
+    toks = jnp.where(jrow < n_acc[None, :], drafts,
+                     jnp.where(jrow == n_acc[None, :], corr[None, :], 0))
+    n_commit = jnp.minimum(n_acc + 1, k)
+    return SpecVerifyOut(toks.astype(jnp.int32), n_commit, n_acc)
+
+
 def proposal_decode_head(cfg: ModelConfig, params: dict, proposal, state,
                          hidden: jax.Array, key: jax.Array,
                          num_candidates: Optional[int] = None,

@@ -1,5 +1,8 @@
 """repro.serve — continuous-batching serving engine with a paged KV pool
-around the MIDX decode head (DESIGN §5)."""
-from repro.serve.kv_pool import PagePool, TRASH_PAGE
+around the MIDX decode head (DESIGN §5), plus the DESIGN §13 serving tier:
+speculative decoding, prompt-prefix caching, chunked prefill, and the
+multi-replica router."""
+from repro.serve.kv_pool import CacheMatch, PagePool, PrefixCache, TRASH_PAGE
 from repro.serve.scheduler import Rejection, Request, Scheduler, SlotState
 from repro.serve.engine import Engine, EngineStats, RequestResult
+from repro.serve.router import Router, RouterStats

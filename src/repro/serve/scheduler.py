@@ -22,7 +22,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.serve.kv_pool import PagePool
+from repro.serve.kv_pool import PagePool, PrefixCache
 
 
 @dataclasses.dataclass
@@ -60,24 +60,47 @@ class SlotState:
     pos: int                        # next cache write position
     out: list = dataclasses.field(default_factory=list)
     latencies: list = dataclasses.field(default_factory=list)
+    # chunked-prefill progress (DESIGN §13): next prompt position still to
+    # prefill. == len(request.tokens) means the prompt is fully prefilled
+    # (always true under the legacy whole-prompt batched prefill path).
+    prefill_pos: int = 0
+    prefill_s: float = 0.0          # wall seconds spent in prefill chunks
+    shared_tokens: int = 0          # prompt tokens reused from the prefix cache
+    # speculative-decoding accounting (per-slot acceptance rate)
+    drafted: int = 0
+    accepted: int = 0
 
     @property
     def done(self) -> bool:
         return len(self.out) >= self.request.max_new
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill_pos < len(self.request.tokens)
 
 
 class Scheduler:
     """FIFO continuous batching over a fixed slot set + page pool."""
 
     def __init__(self, num_slots: int, pool: PagePool,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 cache: Optional[PrefixCache] = None,
+                 token_slack: int = 0):
         self.num_slots = num_slots
         self.pool = pool
         self.max_queue = max_queue  # None = unbounded intake
+        self.cache = cache          # prefix cache (DESIGN §13); None = off
+        # extra page budget per request: a speculative wave of k drafts may
+        # write up to k-1 positions past the last committed token, so those
+        # scratch writes must land in owned pages, not clip the page table
+        self.token_slack = token_slack
         self.queue: collections.deque[Request] = collections.deque()
         self.active: dict[int, SlotState] = {}
         self._free_slots = sorted(range(num_slots), reverse=True)
         self.waves = 0              # admission waves (nonempty admits)
+
+    def _need(self, req: Request) -> int:
+        return len(req.tokens) + req.max_new + self.token_slack
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> Optional[Rejection]:
@@ -87,7 +110,7 @@ class Scheduler:
         if req.max_new < 1:
             raise ValueError(f"request {req.rid}: max_new must be >= 1 "
                              "(prefill always samples the first token)")
-        need = len(req.tokens) + req.max_new
+        need = self._need(req)
         if not self.pool.fits(need):
             return Rejection(
                 req.rid, "oversized_slot",
@@ -133,19 +156,42 @@ class Scheduler:
 
     # ------------------------------------------------------------- admission
     def admit(self, now: float = float("inf")) -> list[SlotState]:
-        """Admit arrived queue-head requests while slots and pages last."""
+        """Admit arrived queue-head requests while slots and pages last.
+
+        With a prefix cache attached, admission first matches the prompt
+        against the trie: shared pages don't draw on the free list, and a
+        fresh-page shortfall triggers LRU eviction of cache-only pages
+        before the FIFO head is declared blocked."""
         admitted = []
         while self.queue and self._free_slots:
             req = self.queue[0]
             if req.arrival > now:
                 break
-            if not self.pool.can_alloc(len(req.tokens) + req.max_new):
-                break               # strict FIFO: wait for pages, no overtaking
+            need = self._need(req)
+            # NB: PrefixCache has __len__, so an *empty* cache is falsy —
+            # gate on identity, never truthiness
+            match = (self.cache.match(req.tokens)
+                     if self.cache is not None else None)
+            n_shared = len(match.pages) if match is not None else 0
+            if not self.pool.can_alloc(need, shared_pages=n_shared):
+                if self.cache is not None:
+                    shortfall = (self.pool.pages_needed(need) - n_shared
+                                 - self.pool.free_pages)
+                    if shortfall > 0:
+                        self.cache.evict(shortfall)
+                if not self.pool.can_alloc(need, shared_pages=n_shared):
+                    break           # strict FIFO: wait for pages, no overtaking
             self.queue.popleft()
             slot = self._free_slots.pop()
-            self.pool.alloc(slot, len(req.tokens) + req.max_new)
+            self.pool.alloc(slot, need,
+                            shared=match.pages if match is not None else ())
+            if match is not None:
+                self.cache.commit_match(match)
+            shared_tokens = n_shared * self.pool.page_size
             ss = SlotState(slot=slot, request=req, key=None,
-                           pos=len(req.tokens))
+                           pos=len(req.tokens),
+                           prefill_pos=shared_tokens,
+                           shared_tokens=shared_tokens)
             self.active[slot] = ss
             admitted.append(ss)
         if admitted:

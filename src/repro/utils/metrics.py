@@ -56,6 +56,40 @@ def latency_summary(latencies_s, qs=(50, 95, 99),
     return out
 
 
+def serving_load_summary(results, wall_s: float,
+                         deadline_ms: float | None = None) -> dict[str, float]:
+    """Open-loop load-test summary over a dict of engine `RequestResult`s
+    (DESIGN §13): admitted / shed / timeout split, token throughput, and
+    goodput — tokens that landed inside their request's latency budget
+    (all ok-status tokens when `deadline_ms` is None, since shed and
+    timed-out requests already fell out of the ok bucket)."""
+    rs = list(results.values())
+    ok = [r for r in rs if r.status == "ok"]
+    shed = sum(1 for r in rs if r.status == "shed")
+    timeout = sum(1 for r in rs if r.status == "timeout")
+    tokens = sum(len(r.tokens) for r in ok)
+    good = tokens
+    if deadline_ms is not None:
+        good = sum(
+            sum(1 for lat in r.latencies_s if lat * 1e3 <= deadline_ms)
+            for r in ok)
+    lats = [lat for r in ok for lat in r.latencies_s]
+    out = {"admitted": len(ok), "shed": shed, "timeouts": timeout,
+           "tokens": tokens,
+           "tok_s": tokens / max(wall_s, 1e-9),
+           "goodput_tok_s": good / max(wall_s, 1e-9)}
+    out.update(latency_summary(lats, qs=(50, 99)))
+    return out
+
+
+def spec_decode_summary(stats) -> dict[str, float]:
+    """Speculative-decoding report off an EngineStats (DESIGN §13)."""
+    return {"spec_waves": stats.spec_waves,
+            "spec_drafted": stats.spec_drafted,
+            "spec_accepted": stats.spec_accepted,
+            "accept_rate": stats.accept_rate()}
+
+
 def refresh_summary(events) -> dict[str, float]:
     """Aggregate index-refresh events from the train loop (DESIGN §8).
 

@@ -1,0 +1,200 @@
+"""Refcounted PagePool + PrefixCache invariants (DESIGN §13).
+
+Property-tested claims (the docstring contract of serve.kv_pool.PagePool):
+  - the trash page is never handed out and never refcounted;
+  - refcount == 0  ⟺  the page is on the free list — a page is never free
+    and owned at once, and never handed out twice without a release;
+  - shared (refcount > 1) pages only ever appear in the *leading* entries of
+    a slot's page table — before every position the slot writes;
+  - alloc is all-or-nothing; free returns every page.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.serve.kv_pool import TRASH_PAGE, PagePool, PrefixCache
+
+try:  # hypothesis drives the search when present; a seeded fuzzer otherwise
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+PAGE = 4
+SLOTS = 3
+PPS = 6                      # pages per slot
+NPAGES = 12                  # incl. trash
+
+
+def _check_invariants(pool: PagePool):
+    free = set(pool._free)
+    assert TRASH_PAGE not in free
+    assert pool.refcount(TRASH_PAGE) == 0
+    for p in range(1, pool.num_pages):
+        # refcount == 0 ⟺ free (never both owned and free)
+        assert (pool.refcount(p) == 0) == (p in free), p
+    # no page is owned (as a writable, non-shared page) by two slots
+    fresh_owned = []
+    for slot, pages in pool._owned.items():
+        shared = pool.shared_count(slot)
+        fresh_owned.extend(pages[shared:])
+        # shared pages lead the table; every one has extra holders
+        for q in pages[:shared]:
+            assert pool.refcount(q) >= 2
+    assert len(fresh_owned) == len(set(fresh_owned)), "page owned twice"
+    # table rows mirror the ownership lists
+    for slot, pages in pool._owned.items():
+        np.testing.assert_array_equal(pool.table[slot, :len(pages)], pages)
+        assert np.all(pool.table[slot, len(pages):] == TRASH_PAGE)
+
+
+# one op = (kind, slot, tokens); interpretation clamps to validity so every
+# generated sequence is executable — the point is invariant preservation,
+# not error paths (those are covered below)
+_KINDS = ["alloc", "free", "cache_insert", "cache_evict", "alloc_shared"]
+
+
+def _run_ops(ops, rnd):
+    pool = PagePool(NPAGES, PAGE, PPS, SLOTS)
+    cache = PrefixCache(pool)
+    next_tok = [0]
+
+    def fresh_tokens(n):
+        t = np.arange(next_tok[0], next_tok[0] + n, dtype=np.int32)
+        next_tok[0] += n
+        return t
+
+    inserted = []            # (tokens, n_full_pages) available for matching
+    for kind, slot, tokens in ops:
+        if kind == "alloc" and slot not in pool._owned:
+            if pool.can_alloc(tokens):
+                pool.alloc(slot, tokens)
+        elif kind == "alloc_shared" and slot not in pool._owned and inserted:
+            toks, _ = inserted[rnd.randrange(len(inserted))]
+            m = cache.match(toks)
+            need = max(tokens, len(toks) + 1)
+            if need <= PPS * PAGE and pool.can_alloc(need,
+                                                     shared_pages=len(m.pages)):
+                pool.alloc(slot, need, shared=m.pages)
+                cache.commit_match(m)
+        elif kind == "free" and slot in pool._owned:
+            pool.free(slot)
+        elif kind == "cache_insert" and slot in pool._owned:
+            shared = pool.shared_count(slot)
+            own = pool._owned[slot]
+            nfull = len(own) - shared
+            if nfull > 0:
+                toks = fresh_tokens(nfull * PAGE)
+                cache.insert(toks, np.asarray(own[shared:], np.int32))
+                inserted.append((toks, nfull))
+        elif kind == "cache_evict":
+            cache.evict(tokens // PAGE + 1)
+        _check_invariants(pool)
+    # teardown: everything returns to the free list
+    for slot in list(pool._owned):
+        pool.free(slot)
+    cache.drop()
+    _check_invariants(pool)
+    assert pool.free_pages == pool.num_pages - 1
+
+
+if HAVE_HYPOTHESIS:
+    _op = st.tuples(st.sampled_from(_KINDS),
+                    st.integers(0, SLOTS - 1),
+                    st.integers(1, PPS * PAGE))
+
+    @settings(max_examples=60, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(_op, max_size=30), st.randoms(use_true_random=False))
+    def test_pool_invariants_under_random_ops(ops, rnd):
+        _run_ops(ops, rnd)
+else:
+    @pytest.mark.parametrize("seed", range(60))
+    def test_pool_invariants_under_random_ops(seed):
+        rnd = random.Random(seed)
+        ops = [(rnd.choice(_KINDS), rnd.randrange(SLOTS),
+                rnd.randint(1, PPS * PAGE))
+               for _ in range(rnd.randrange(31))]
+        _run_ops(ops, rnd)
+
+
+def test_double_alloc_raises():
+    pool = PagePool(NPAGES, PAGE, PPS, SLOTS)
+    pool.alloc(0, 8)
+    with pytest.raises(ValueError, match="already holds"):
+        pool.alloc(0, 4)
+
+
+def test_trash_page_never_retained_or_released():
+    pool = PagePool(NPAGES, PAGE, PPS, SLOTS)
+    with pytest.raises(ValueError):
+        pool.retain(TRASH_PAGE)
+    with pytest.raises(ValueError):
+        pool.release(TRASH_PAGE)
+
+
+def test_retain_of_free_page_raises():
+    pool = PagePool(NPAGES, PAGE, PPS, SLOTS)
+    with pytest.raises(ValueError, match="free page"):
+        pool.retain(3)
+
+
+def test_shared_pages_survive_owner_free():
+    """A cached page outlives the slot that wrote it; it frees only when the
+    last holder (the cache) lets go."""
+    pool = PagePool(NPAGES, PAGE, PPS, SLOTS)
+    cache = PrefixCache(pool)
+    toks = np.arange(2 * PAGE, dtype=np.int32)
+    pages = pool.alloc(0, len(toks) + 2)
+    cache.insert(toks, pages)
+    pool.free(0)
+    assert cache.counters()["cached_pages"] == 2
+    for p in pages[:2]:
+        assert pool.refcount(int(p)) == 1       # cache hold only
+    # a second slot reuses them without drawing on the free list
+    m = cache.match(np.concatenate([toks, np.arange(5, dtype=np.int32)]))
+    assert [int(p) for p in m.pages] == [int(p) for p in pages[:2]]
+    before = pool.free_pages
+    pool.alloc(1, len(toks) + 2, shared=m.pages)  # 10 tokens -> 3 pages
+    assert pool.free_pages == before - 1        # only the fresh tail page
+    pool.free(1)
+    cache.drop()
+    assert pool.free_pages == pool.num_pages - 1
+
+
+def test_match_is_strict_prefix_only():
+    """Reuse never covers the final prompt position: its hidden state must
+    be recomputed to sample the first token, so the last (possibly partial)
+    page is always fresh — COW by recomputation."""
+    pool = PagePool(NPAGES, PAGE, PPS, SLOTS)
+    cache = PrefixCache(pool)
+    toks = np.arange(2 * PAGE, dtype=np.int32)   # exactly 2 full pages
+    pages = pool.alloc(0, len(toks) + 1)
+    cache.insert(toks, pages)
+    # identical prompt: only (plen-1)//PAGE = 1 page may be reused
+    m = cache.match(toks)
+    assert m.limit == 1 and len(m.pages) == 1
+    pool.free(0)
+    cache.drop()
+
+
+def test_eviction_is_leaf_first_and_skips_held_pages():
+    pool = PagePool(NPAGES, PAGE, PPS, SLOTS)
+    cache = PrefixCache(pool)
+    toks = np.arange(3 * PAGE, dtype=np.int32)
+    pages = pool.alloc(0, len(toks) + 1)
+    cache.insert(toks, pages)
+    pool.free(0)
+    # all three cached; a reader holds the chain head
+    m = cache.match(np.concatenate([toks, toks[:1]]))
+    assert len(m.pages) == 3
+    pool.alloc(1, 4 * PAGE, shared=m.pages[:1])
+    freed = cache.evict(3)
+    # the two childless tail pages go; the head is held by slot 1
+    assert freed == 2
+    assert cache.counters()["cache_evictions"] == 2
+    assert pool.refcount(int(pages[0])) == 2
+    pool.free(1)
+    cache.drop()
+    assert pool.free_pages == pool.num_pages - 1

@@ -1,0 +1,117 @@
+"""Multi-replica router (DESIGN §13): load-weighted admission, structured
+shedding, hot index-swap fan-out, merged stats, and output determinism."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.serve import Engine, Request, Router
+from repro.serve.scheduler import Rejection
+
+
+def _cfg(**serve_kw):
+    cfg = ModelConfig(name="router-test", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=96, head_dim=16, vocab_pad_multiple=16,
+                      remat=False, dtype="float32")
+    cfg = cfg.with_head(midx_k=4, decode_candidates=8, kmeans_iters=2)
+    kw = dict(max_slots=2, page_size=4, max_seq=48)
+    kw.update(serve_kw)
+    return cfg.with_serve(**kw)
+
+
+@pytest.fixture(scope="module")
+def replicas():
+    cfg = _cfg()
+    e0 = Engine(cfg, head="midx", init_key=jax.random.PRNGKey(3))
+    e1 = Engine(cfg, e0.params, index=e0.index, head="midx",
+                init_key=jax.random.PRNGKey(3))
+    return cfg, e0, e1
+
+
+def _reqs(n, plen=7, max_new=4, seed=1):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, tokens=rng.integers(0, 96, size=plen)
+                    .astype(np.int32), max_new=max_new, seed=1)
+            for i in range(n)]
+
+
+def test_router_balances_and_completes(replicas):
+    cfg, e0, e1 = replicas
+    router = Router([e0, e1])
+    res = router.run(_reqs(6))
+    assert sorted(res) == list(range(6))
+    assert all(r.status == "ok" for r in res.values())
+    # load-weighted admission splits an up-front burst evenly
+    assert router.rstats.per_replica == [3, 3]
+    s = router.stats()
+    assert s.generated == 24
+    assert "routed_per_replica" in router.summary()
+
+
+def test_router_output_identical_to_solo_engine(replicas):
+    cfg, e0, e1 = replicas
+    router = Router([e0, e1])
+    reqs = _reqs(4, seed=7)
+    res = router.run(reqs)
+    ref = Engine(cfg, e0.params, index=e0.index, head="midx")
+    for r in reqs:
+        solo = ref.replay_single(r)
+        np.testing.assert_array_equal(res[r.rid].tokens, solo)
+
+
+def test_router_sheds_oversized_structurally(replicas):
+    cfg, e0, e1 = replicas
+    router = Router([e0, e1])
+    big = Request(rid=99, tokens=np.zeros(500, np.int32), max_new=4)
+    out = router.route(big)
+    assert isinstance(out, Rejection) and out.reason == "oversized_slot"
+    res = router.run([big])
+    assert res[99].status == "shed" and "oversized" in res[99].reason
+
+
+def test_router_sheds_when_all_queues_full():
+    cfg = _cfg(max_queue=1)
+    e0 = Engine(cfg, head="midx", init_key=jax.random.PRNGKey(3))
+    e1 = Engine(cfg, e0.params, index=e0.index, head="midx")
+    router = Router([e0, e1])
+    outs = [router.route(r) for r in _reqs(4, max_new=2)]
+    placed = [o for o in outs if not isinstance(o, Rejection)]
+    rejected = [o for o in outs if isinstance(o, Rejection)]
+    assert len(placed) == 2 and len(rejected) == 2
+    assert all(o.reason == "queue_full" for o in rejected)
+    assert router.rstats.shed == 2
+    for e in (e0, e1):          # drain so the module fixtures stay clean
+        e.start_run([])
+        while not e.sched.done:
+            e.tick(0.0)
+        e.finish_run()
+
+
+def test_router_admission_prefers_freer_replica(replicas):
+    cfg, e0, e1 = replicas
+    router = Router([e0, e1])
+    # preload replica 0 with queued work -> pending pages weigh against it
+    r0 = _reqs(1, seed=11)[0]
+    assert router.route(r0) == 0          # both empty: tie breaks to id 0
+    r1 = Request(rid=50, tokens=np.arange(7, dtype=np.int32), max_new=4)
+    assert router.route(r1) == 1          # replica 0 now has pending pages
+    for e in (e0, e1):
+        e.start_run([])
+        while not e.sched.done:
+            e.tick(0.0)
+        e.finish_run()
+
+
+def test_router_swap_fanout(replicas):
+    cfg, e0, e1 = replicas
+    router = Router([e0, e1])
+    swaps0 = (e0.stats.swaps, e1.stats.swaps)
+    outs = router.swap_index(e0.rebuild_index())
+    assert outs == [True, True]
+    assert (e0.stats.swaps, e1.stats.swaps) == (swaps0[0] + 1, swaps0[1] + 1)
+
+
+def test_router_requires_engines():
+    with pytest.raises(ValueError):
+        Router([])

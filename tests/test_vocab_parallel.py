@@ -343,6 +343,48 @@ def test_native_index_init_and_refresh():
     """)
 
 
+def test_vp_train_export_restores_into_engine():
+    """Serving export from a vocab-parallel run (DESIGN §13): train_loop on a
+    (data=2, vocab=2) mesh merges the sharded index back to the replicated
+    layout (pure re-layout — bit-identical assignments, rebuilt global CSR)
+    and the serving stack restores it directly via Engine.from_checkpoint."""
+    _run("""
+    import tempfile, os
+    import jax, numpy as np
+    from repro.configs.base import HeadConfig, ModelConfig
+    from repro.dist.vocab_parallel import unshard_index
+    from repro.launch.mesh import make_vocab_mesh
+    from repro.launch.train import train_loop
+    from repro.serve import Engine, Request
+
+    cfg = ModelConfig(
+        name="vp-export", family="dense", num_layers=1, d_model=32,
+        num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=200, head_dim=16,
+        vocab_pad_multiple=8, remat=False, dtype="float32",
+        head=HeadConfig(mode="midx", midx_k=8, num_negatives=12,
+                        proposal="per_token", kmeans_iters=2))
+    with tempfile.TemporaryDirectory() as tmp:
+        params, _, sharded, _ = train_loop(
+            cfg, steps=2, batch_size=4, seq_len=8, ckpt_dir=tmp,
+            ckpt_every=100, lr=1e-3, log_every=1, seed=0,
+            mesh=make_vocab_mesh(2, 2))
+        scfg = cfg.with_serve(max_slots=1, page_size=4, max_seq=32)
+        eng = Engine.from_checkpoint(scfg, os.path.join(tmp, "serve"),
+                                     head="midx")
+        # the restored index is the merged (replicated-layout) one
+        merged = unshard_index(sharded)
+        np.testing.assert_array_equal(np.asarray(eng.index.assign1),
+                                      np.asarray(merged.assign1))
+        np.testing.assert_array_equal(np.asarray(eng.index.counts),
+                                      np.asarray(merged.counts))
+        req = Request(rid=0, tokens=np.arange(7, dtype=np.int32),
+                      max_new=4, seed=1)
+        res = eng.run([req])[0]
+        assert res.status == "ok" and len(res.tokens) == 4, res
+        assert all(0 <= t < cfg.vocab_size for t in res.tokens)
+    """)
+
+
 def test_refresh_pad_and_mask_non_dividing_matches_replicated():
     """Regression: a padded vocab that does not divide the data degree used
     to silently fall back to a replicated refresh. The pad-and-mask sharded
